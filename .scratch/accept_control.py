@@ -1,0 +1,22 @@
+import numpy as np
+from repro.config import CoSineConfig
+from repro.configs.drafters import tiny_target
+from repro.data.synthetic import SyntheticCorpus
+from repro.launch.train import train_model
+from repro.serving.engine import SpeculativeEngine
+
+V = 128
+corpus = SyntheticCorpus(V, seed=0)
+tcfg = tiny_target(V)
+tparams, _ = train_model(tcfg, corpus, None, steps=60, batch=8, seq=48, verbose=False)
+
+# drafter == target: every draft token must be accepted (gamma+1 per iter)
+drafters = [(tcfg, tparams, "self")]
+cos = CoSineConfig(n_drafters=1, draft_len=4, drafters_per_request=1, tree_width=0)
+eng = SpeculativeEngine((tcfg, tparams), drafters, cos, strategy="vanilla", max_len=256, seed=0)
+p, dom = corpus.prompts(1, 12, seed=7)[0]
+eng.submit(p, max_new_tokens=20, domain=dom)
+st = eng.run()
+print(f"iters={len(st.records)} committed={st.total_committed} acc/iter={st.mean_acceptance:.2f}")
+assert st.mean_acceptance > 4.0, "self-drafting should accept all gamma+1 tokens"
+print("CONTROL OK: self-drafting accepts gamma+1 per iteration")

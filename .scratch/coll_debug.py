@@ -1,0 +1,60 @@
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, re, math
+from collections import defaultdict
+from repro.launch.dryrun import make_step, resolve_config
+from repro.launch.mesh import make_production_mesh
+from repro.analysis.hlo import (parse_computations, COLLECTIVES, _SHAPE_RE,
+                                DTYPE_BYTES, _TRIP)
+
+arch, shape, kind, variant = sys.argv[1], sys.argv[2], sys.argv[3], \
+    (sys.argv[4] if len(sys.argv) > 4 else "")
+mesh = make_production_mesh()
+cfg = resolve_config(arch, shape, variant)
+fn, args, shards = make_step(cfg, shape, mesh, kind, variant)
+with mesh:
+    hlo = jax.jit(fn, in_shardings=tuple(shards)).lower(*args).compile().as_text()
+
+comps = parse_computations(hlo)
+entry = comps.pop("__entry__")[0]
+callers = defaultdict(list); direct = defaultdict(list)
+for name, lines in comps.items():
+    for line in lines:
+        rhs = line.split("=", 1)[1] if "=" in line else line
+        cf = None
+        for c in COLLECTIVES:
+            if re.search(rf"\b{c}(-start)?\(", rhs):
+                cf = c; break
+        if cf:
+            head = rhs.split(cf)[0]
+            nb = sum(math.prod([int(d) for d in dims.split(',') if d] or [1])
+                     * DTYPE_BYTES[dt] for dt, dims in _SHAPE_RE.findall(head))
+            meta = re.search(r'op_name="([^"]*)"', line)
+            direct[name].append((cf, nb, meta.group(1)[-90:] if meta else "?"))
+            continue
+        trip = 1
+        tm = _TRIP.search(line)
+        if tm:
+            trip = int(tm.group(1))
+        for kw, mult in (("body", trip), ("condition", trip),
+                         ("to_apply", 1), ("calls", 1)):
+            for callee in re.findall(rf"{kw}=%?([\w.\-]+)", line):
+                callers[callee].append((name, mult))
+memo = {}
+def mult_of(c):
+    if c == entry:
+        return 1.0
+    if c in memo:
+        return memo[c]
+    memo[c] = 0.0
+    memo[c] = sum(mult_of(p) * m for p, m in callers.get(c, [])) or 1.0
+    return memo[c]
+rows = []
+for name, cols in direct.items():
+    for c, nb, meta in cols:
+        rows.append((nb * max(mult_of(name), 1), c, nb, mult_of(name), meta))
+rows.sort(reverse=True)
+tot = sum(r[0] for r in rows)
+print(f"TOTAL corrected bytes/dev: {tot:.3e}  ({len(rows)} collectives)")
+for t, c, nb, m, meta in rows[:14]:
+    print(f"{t:.3e} {c:<18} base={nb:.2e} x{m:<6.0f} {meta}")

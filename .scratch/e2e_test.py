@@ -1,0 +1,42 @@
+import jax, jax.numpy as jnp, numpy as np
+from repro.config import CoSineConfig
+from repro.configs.drafters import tiny_target, tiny_drafter
+from repro.data.synthetic import SyntheticCorpus, DOMAINS
+from repro.launch.train import train_model
+from repro.serving.engine import SpeculativeEngine
+from repro.models import model as M
+
+V = 128
+corpus = SyntheticCorpus(V, seed=0)
+tcfg = tiny_target(V)
+tparams, tl = train_model(tcfg, corpus, None, steps=60, batch=8, seq=48, verbose=False)
+print("target loss", tl[0], "->", tl[-1])
+dcfg = tiny_drafter(V)
+drafters = []
+for i, dom in enumerate(DOMAINS[:3]):
+    dp, dl = train_model(dcfg, corpus, dom, steps=40, batch=8, seq=48, seed=i+1, verbose=False)
+    drafters.append((dcfg, dp, dom))
+    print(f"drafter {dom} loss {dl[0]:.3f}->{dl[-1]:.3f}")
+
+cos = CoSineConfig(n_drafters=3, draft_len=4, drafters_per_request=2, tree_width=2)
+eng = SpeculativeEngine((tcfg, tparams), drafters, cos, strategy="cosine", max_len=256, seed=0)
+prompts = corpus.prompts(4, 16, seed=3)
+for p, dom in prompts:
+    eng.submit(p, max_new_tokens=24, domain=dom)
+stats = eng.run()
+print("iterations:", len(stats.records), "committed:", stats.total_committed, "mean acc/iter:", stats.mean_acceptance)
+
+params, cfg = tparams, tcfg
+for r in eng.pool.completed:
+    ctx = list(r.prompt)
+    ref = []
+    cache = M.init_cache(cfg, 1, 256, dtype=jnp.float32)
+    lg, cache, _ = M.prefill(params, cfg, jnp.asarray(ctx)[None, :], cache)
+    last = np.asarray(lg[0, -1, :cfg.vocab])
+    for _ in range(r.max_new_tokens):
+        t = int(np.argmax(last))
+        ref.append(t)
+        lg, cache, _ = M.decode_step(params, cfg, jnp.asarray([[t]]), cache)
+        last = np.asarray(lg[0, 0, :cfg.vocab])
+    assert r.generated == ref, (r.rid, r.generated[:10], ref[:10])
+print("LOSSLESSNESS OK: speculative output == greedy AR for all requests")

@@ -1,0 +1,18 @@
+"""Probe: does the sharp fixture give paper-range acceptance (1.7-3.2)?"""
+import sys, time
+sys.path.insert(0, "benchmarks")
+from common import build_fixture
+
+t0 = time.time()
+fx = build_fixture(verbose=True)
+print(f"fixture in {time.time()-t0:.0f}s")
+
+# in-domain vs cross-domain acceptance, drafter 0 (piqa)
+from repro.config import CoSineConfig
+for dom in ["piqa", "medqa"]:
+    eng = fx.engine("vanilla", n_drafters=1)
+    for p, d in [(pp, dd) for pp, dd in fx.corpus.prompts(6, 16, seed=3) if dd == dom][:3]:
+        eng.submit(p, max_new_tokens=32, domain=d)
+    st = eng.run()
+    per_req = st.total_committed / max(sum(r.n_iterations for r in eng.pool.completed), 1)
+    print(f"drafter=piqa domain={dom}: acc tokens/iter/request = {per_req:.2f}")

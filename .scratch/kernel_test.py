@@ -1,0 +1,44 @@
+import jax, jax.numpy as jnp, numpy as np
+from repro.kernels.tree_attention.ops import tree_attention
+from repro.kernels.tree_attention.ref import tree_attention_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+key = jax.random.PRNGKey(0)
+
+def rand(*s, k=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(k), s, dtype)
+
+# tree attention: B=2, Hkv=2, R=12 rows, S=40 cache, M=12 seg
+B,H,R,S,Msz,Dk,Dv = 2,2,12,40,12,32,16
+q = rand(B,H,R,Dk,k=1)
+kc = rand(B,H,S,Dk,k=2); vc = rand(B,H,S,Dv,k=3)
+ks = rand(B,H,Msz,Dk,k=4); vs = rand(B,H,Msz,Dv,k=5)
+cache_pos = jnp.broadcast_to(jnp.arange(S),(B,S)).astype(jnp.int32)
+cache_pos = jnp.where(cache_pos < 30, cache_pos, -1)  # 30 valid
+q_pos = 30 + jnp.broadcast_to(jnp.arange(R)//2, (B,R)).astype(jnp.int32)
+seg_mask = jax.random.bernoulli(jax.random.PRNGKey(6), 0.5, (B,R,Msz))
+seg_mask = seg_mask | jnp.eye(R,Msz,dtype=bool)
+out = tree_attention(q,kc,vc,cache_pos,ks,vs,q_pos,seg_mask,scale=0.2,interpret=True)
+ref = tree_attention_ref(q,kc,vc,cache_pos,ks,vs,q_pos,seg_mask,scale=0.2)
+np.testing.assert_allclose(np.asarray(out),np.asarray(ref),rtol=2e-5,atol=2e-5)
+print("tree_attention == ref OK", out.shape)
+
+# with window
+out = tree_attention(q,kc,vc,cache_pos,ks,vs,q_pos,seg_mask,scale=0.2,window=16,interpret=True)
+ref = tree_attention_ref(q,kc,vc,cache_pos,ks,vs,q_pos,seg_mask,scale=0.2,window=16)
+np.testing.assert_allclose(np.asarray(out),np.asarray(ref),rtol=2e-5,atol=2e-5)
+print("tree_attention window OK")
+
+# decode attention
+G = 8
+q2 = rand(B,H,G,Dk,k=7)
+q_pos2 = jnp.array([29, 25], jnp.int32)
+out = decode_attention(q2,kc,vc,cache_pos,q_pos2,scale=0.2,interpret=True,block_k=16)
+ref = decode_attention_ref(q2,kc,vc,cache_pos,q_pos2,scale=0.2)
+np.testing.assert_allclose(np.asarray(out),np.asarray(ref),rtol=2e-5,atol=2e-5)
+print("decode_attention == ref OK", out.shape)
+out = decode_attention(q2,kc,vc,cache_pos,q_pos2,scale=0.2,window=8,interpret=True,block_k=16)
+ref = decode_attention_ref(q2,kc,vc,cache_pos,q_pos2,scale=0.2,window=8)
+np.testing.assert_allclose(np.asarray(out),np.asarray(ref),rtol=2e-5,atol=2e-5)
+print("decode_attention window OK")

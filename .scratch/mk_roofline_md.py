@@ -1,0 +1,39 @@
+"""Render the §Roofline table + hillclimb sections into EXPERIMENTS.md."""
+import glob
+import json
+import sys
+
+rows = []
+variants = {}
+for p in sorted(glob.glob("experiments/dryrun/*.json")):
+    r = json.load(open(p))
+    key = (r["arch"], r["shape"], r["step"], r.get("variant", ""))
+    if r["mesh"] == "16x16":
+        if r.get("variant"):
+            variants[key] = r
+        else:
+            rows.append(r)
+
+lines = ["| arch | shape | step | compute_s | memory_s | collective_s | dominant | useful (6ND/analytic) |",
+         "|---|---|---|---|---|---|---|---|"]
+for r in sorted(rows, key=lambda x: (x["arch"], x["shape"], x["step"])):
+    rl = r["roofline"]
+    u = r.get("useful_flops_ratio")
+    lines.append(
+        f"| {r['arch']} | {r['shape']} | {r['step']} | {rl['compute_s']:.3e} "
+        f"| {rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+        f"{rl['dominant']} | {u:.2f} |" if u else
+        f"| {r['arch']} | {r['shape']} | {r['step']} | {rl['compute_s']:.3e} "
+        f"| {rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+        f"{rl['dominant']} | - |")
+n_multi = len([p for p in glob.glob("experiments/dryrun/*.json")
+               if json.load(open(p))["mesh"] == "2x16x16"])
+lines.append("")
+lines.append(f"Multi-pod (2x16x16): {n_multi} combos lowered+compiled OK "
+             "(same JSON directory).")
+table = "\n".join(lines)
+
+md = open("EXPERIMENTS.md").read()
+md = md.replace("<!-- ROOFLINE_TABLE -->", table)
+open("EXPERIMENTS.md", "w").write(md)
+print(f"inserted {len(rows)} baseline rows, {len(variants)} variant rows")

@@ -1,0 +1,34 @@
+import numpy as np
+from repro.config import CoSineConfig
+from repro.configs.drafters import tiny_target, tiny_drafter
+from repro.data.synthetic import SyntheticCorpus, DOMAINS
+from repro.launch.train import train_model
+from repro.serving.engine import SpeculativeEngine, STRATEGIES
+
+V = 128
+corpus = SyntheticCorpus(V, seed=0)
+tcfg = tiny_target(V)
+tparams, _ = train_model(tcfg, corpus, None, steps=60, batch=8, seq=48, verbose=False)
+dcfg = tiny_drafter(V)
+drafters = []
+for i, dom in enumerate(DOMAINS[:3]):
+    dp, _ = train_model(dcfg, corpus, dom, steps=40, batch=8, seq=48, seed=i + 1, verbose=False)
+    drafters.append((dcfg, dp, dom))
+
+prompts = corpus.prompts(3, 12, seed=7)
+outputs = {}
+for strat in STRATEGIES:
+    cos = CoSineConfig(n_drafters=3, draft_len=4, drafters_per_request=2, tree_width=2)
+    eng = SpeculativeEngine((tcfg, tparams), drafters, cos, strategy=strat, max_len=256, seed=0)
+    for p, dom in prompts:
+        eng.submit(p, max_new_tokens=16, domain=dom)
+    st = eng.run()
+    outs = {tuple(r.prompt.tolist()): r.generated for r in eng.pool.completed}
+    outputs[strat] = outs
+    print(f"{strat:10s} iters={len(st.records):3d} committed={st.total_committed} "
+          f"acc/iter={st.mean_acceptance:.2f} sim_ms={st.sim_ms:.1f} tput={st.throughput_tps:.1f} tok/s")
+
+ref = outputs["ar"]
+for strat in STRATEGIES[1:]:
+    assert outputs[strat] == ref, f"{strat} output differs from AR!"
+print("ALL STRATEGIES LOSSLESS: identical outputs")

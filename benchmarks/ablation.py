@@ -1,0 +1,45 @@
+"""§6.4 ablation: full CoSine vs w/o cooperative routing vs w/o token
+fusion vs SpecInfer, and acceptance improvement vs number of cooperative
+drafter nodes."""
+from __future__ import annotations
+
+import time
+
+from repro.config import CoSineConfig
+
+
+def _tput(fixture, strategy, n_drafters=5, enable_routing=True,
+          enable_fusion=True, n_prompts=4, max_new=20):
+    cos = CoSineConfig(n_drafters=n_drafters, draft_len=5,
+                       drafters_per_request=min(2, n_drafters), tree_width=2,
+                       enable_routing=enable_routing,
+                       enable_fusion=enable_fusion)
+    eng = fixture.engine(strategy, cosine=cos, n_drafters=n_drafters)
+    for p, dom in fixture.corpus.prompts(n_prompts, 16, seed=71):
+        eng.submit(p, max_new_tokens=max_new, domain=dom)
+    st = eng.run()
+    return st.throughput_tps, st.mean_acceptance
+
+
+def run(fixture):
+    rows = []
+    t0 = time.time()
+    spec_tps, _ = _tput(fixture, "specinfer")
+    variants = {
+        "full": dict(),
+        "wo_routing": dict(enable_routing=False),
+        "wo_fusion": dict(enable_fusion=False),
+    }
+    for name, kw in variants.items():
+        tps, acc = _tput(fixture, "cosine", **kw)
+        rows.append((f"ablation_{name}", (time.time() - t0) * 1e6 / 4,
+                     f"norm_tput={tps / max(spec_tps, 1e-9):.2f};"
+                     f"acc={acc:.2f}"))
+
+    # acceptance vs cooperative node count (Fig. 8 analogue)
+    for nd in (1, 2, 3, 5):
+        t0 = time.time()
+        _, acc = _tput(fixture, "cosine", n_drafters=nd)
+        rows.append((f"ablation_nodes_{nd}", (time.time() - t0) * 1e6,
+                     f"acc={acc:.2f}"))
+    return rows

@@ -1,0 +1,46 @@
+"""Fig. 2b: speedup across draft structures — sequential chains of
+increasing length, tree-structured drafts, and multi-drafter aggregation.
+Speedup = simulated tokens/s normalized to AR decoding."""
+from __future__ import annotations
+
+from repro.config import CoSineConfig
+
+
+def _throughput(fixture, strategy, n_prompts=4, max_new=24, **cos_kw):
+    eng = fixture.engine(strategy, **cos_kw)
+    for p, dom in fixture.corpus.prompts(n_prompts, 16, seed=11):
+        eng.submit(p, max_new_tokens=max_new, domain=dom)
+    st = eng.run()
+    mean_iter_us = st.sim_ms / max(len(st.records), 1) * 1e3
+    return st.throughput_tps, st.mean_acceptance, mean_iter_us
+
+
+def run(fixture):
+    rows = []
+    base_tps, _, us = _throughput(fixture, "ar")
+    rows.append(("fig2b_ar_baseline", us, "speedup=1.00"))
+
+    for gamma in (2, 4, 8):
+        tps, acc, us = _throughput(
+            fixture, "vanilla", n_drafters=1,
+            cosine=CoSineConfig(n_drafters=1, draft_len=gamma,
+                                drafters_per_request=1, tree_width=0))
+        rows.append((f"fig2b_sequential_g{gamma}", us,
+                     f"speedup={tps / base_tps:.2f};acc={acc:.2f}"))
+
+    for width in (1, 2):
+        tps, acc, us = _throughput(
+            fixture, "cosine",
+            cosine=CoSineConfig(n_drafters=5, draft_len=5,
+                                drafters_per_request=2, tree_width=width))
+        rows.append((f"fig2b_tree_w{width}", us,
+                     f"speedup={tps / base_tps:.2f};acc={acc:.2f}"))
+
+    for nd in (2, 5):
+        tps, acc, us = _throughput(
+            fixture, "cosine", n_drafters=nd,
+            cosine=CoSineConfig(n_drafters=nd, draft_len=5,
+                                drafters_per_request=min(2, nd), tree_width=2))
+        rows.append((f"fig2b_multidrafter_n{nd}", us,
+                     f"speedup={tps / base_tps:.2f};acc={acc:.2f}"))
+    return rows

@@ -1,0 +1,85 @@
+"""Fig. 2a: GEMM vs GEMV operation balance in speculative drafting vs
+parallel verification.
+
+For each phase we classify every matmul in the model's step by its
+effective M dimension (rows of activations hitting a weight matrix):
+M == 1 per sequence -> GEMV-class (memory-bound weight streaming);
+M > 1 -> GEMM-class (compute-bound). FLOP shares are computed analytically
+from the model dims; wall time per phase is measured on CPU for the
+derived column. This reproduces the paper's observation that sequential
+drafting is GEMV-dominated while batched verification is GEMM-dominated.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+def matmul_flop_split(cfg: ModelConfig, tokens_per_forward: int):
+    """Returns (gemv_flops, gemm_flops) for one forward of the model with
+    `tokens_per_forward` activation rows per weight matrix."""
+    d, hq, hkv, hd, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.resolved_head_dim, cfg.d_ff)
+    per_token = 2 * (d * hq * hd + 2 * d * hkv * hd + hq * hd * d
+                     + 3 * d * f) * cfg.n_layers + 2 * d * cfg.vocab
+    total = per_token * tokens_per_forward
+    if tokens_per_forward == 1:
+        return total, 0.0
+    return 0.0, total
+
+
+def run(fixture, n_iters: int = 20):
+    tcfg, tparams = fixture.target
+    dcfg = fixture.drafters[0][0]
+    gamma = 5
+
+    # drafting = gamma sequential single-token forwards of the SSM
+    gemv_d, gemm_d = matmul_flop_split(dcfg, 1)
+    gemv_d *= gamma
+    # verification = one forward over gamma tokens of the LLM
+    gemv_v, gemm_v = matmul_flop_split(tcfg, gamma)
+
+    eng = fixture.engine("vanilla", n_drafters=1)
+    p, dom = fixture.corpus.prompts(1, 16, seed=0)[0]
+    eng.submit(p, max_new_tokens=4, domain=dom)
+    eng.run()  # warm up jits
+
+    d0 = fixture.drafters[0]
+    from repro.serving.runner import ModelRunner
+    import jax
+    drafter = ModelRunner(dcfg, d0[1], 128)
+    target = ModelRunner(tcfg, tparams, 128)
+    ctx = fixture.corpus.sample("piqa", 32)
+    drafter.prefill_request(0, ctx)
+    target.prefill_request(0, ctx)
+
+    t0 = time.time()
+    for _ in range(n_iters):
+        tok = np.array([1], np.int32)
+        for _ in range(gamma):
+            lg, _ = drafter.decode([0], tok)
+            tok = np.argmax(lg, -1).astype(np.int32)
+    t_draft = (time.time() - t0) / n_iters * 1e6
+
+    toks = np.tile(ctx[:gamma][None], (1, 1)).astype(np.int32)
+    rel = np.arange(gamma, dtype=np.int32)[None]
+    mask = np.tril(np.ones((gamma, gamma), bool))[None]
+    t0 = time.time()
+    for _ in range(n_iters):
+        target.verify([0], toks, rel, mask)
+    t_verify = (time.time() - t0) / n_iters * 1e6
+
+    rows = []
+    tot_d = gemv_d + gemm_d
+    tot_v = gemv_v + gemm_v
+    rows.append(("fig2a_draft_gemv_share", t_draft,
+                 f"gemv_frac={gemv_d / tot_d:.3f}"))
+    rows.append(("fig2a_verify_gemm_share", t_verify,
+                 f"gemm_frac={gemm_v / tot_v:.3f}"))
+    rows.append(("fig2a_us_per_drafted_token", t_draft / gamma, ""))
+    rows.append(("fig2a_us_per_verified_token", t_verify / gamma, ""))
+    return rows

@@ -1,0 +1,64 @@
+"""Kernel microbenchmarks: interpret-mode Pallas vs pure-jnp oracle wall
+time (CPU: correctness-bearing only — TPU timing comes from the roofline),
+plus the XLA blocked-attention path used by the serving models."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_reference
+from repro.kernels.tree_attention.ops import tree_attention
+from repro.kernels.tree_attention.ref import tree_attention_ref
+
+
+def _time(fn, *args, iters=3, **kw):
+    fn(*args, **kw)  # warmup/compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run(fixture=None):
+    rows = []
+    B, H, R, S, Msz, D = 2, 4, 16, 512, 16, 64
+    ks = [jax.random.normal(jax.random.PRNGKey(i), s) for i, s in enumerate([
+        (B, H, R, D), (B, H, S, D), (B, H, S, D), (B, H, Msz, D),
+        (B, H, Msz, D)])]
+    q, kc, vc, kseg, vseg = ks
+    cp = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    qp = jnp.full((B, R), S, jnp.int32)
+    mask = jnp.tril(jnp.ones((R, Msz), bool))[None].repeat(B, 0)
+
+    us_k = _time(tree_attention, q, kc, vc, cp, kseg, vseg, qp, mask,
+                 scale=0.125, interpret=True)
+    us_r = _time(tree_attention_ref, q, kc, vc, cp, kseg, vseg, qp, mask,
+                 scale=0.125)
+    rows.append(("kernel_tree_attention_interp", us_k, f"ref_us={us_r:.0f}"))
+
+    G = 8
+    q2 = jax.random.normal(jax.random.PRNGKey(9), (B, H, G, D))
+    qp2 = jnp.full((B,), S - 1, jnp.int32)
+    us_k = _time(decode_attention, q2, kc, vc, cp, qp2, scale=0.125,
+                 interpret=True)
+    us_r = _time(decode_attention_ref, q2, kc, vc, cp, qp2, scale=0.125)
+    rows.append(("kernel_decode_attention_interp", us_k, f"ref_us={us_r:.0f}"))
+
+    b, L, Hs, P, G_, N = 1, 256, 8, 32, 1, 32
+    kk = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = jax.random.normal(kk[0], (b, L, Hs, P))
+    dt = jax.nn.softplus(jax.random.normal(kk[1], (b, L, Hs)))
+    A = -jnp.exp(jax.random.normal(kk[2], (Hs,)))
+    Bm = jax.random.normal(kk[3], (b, L, G_, N))
+    Cm = jax.random.normal(kk[4], (b, L, G_, N))
+    us_k = _time(ssd, x, dt, A, Bm, Cm, chunk=64, interpret=True)
+    us_r = _time(ssd_reference, x, dt, A, Bm, Cm)
+    rows.append(("kernel_ssd_scan_interp", us_k, f"ref_us={us_r:.0f}"))
+    return rows

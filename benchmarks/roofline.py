@@ -1,0 +1,58 @@
+"""§Roofline: reads the dry-run JSONs (launch/dryrun.py output) and prints
+the three-term roofline per (arch x shape x mesh): compute / memory /
+collective seconds, dominant term, and the useful-FLOPs ratio
+MODEL_FLOPS / HLO_FLOPS (6ND dense, 6·N_active·D MoE)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_results(dryrun_dir: str = DRYRUN_DIR):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(results, mesh="16x16", step_filter=None):
+    rows = []
+    for r in results:
+        if r["mesh"] != mesh:
+            continue
+        if step_filter and r["step"] != step_filter:
+            continue
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "step": r["step"],
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "useful": r.get("useful_flops_ratio"),
+        })
+    return rows
+
+
+def run(fixture=None):
+    t0 = time.time()
+    results = load_results()
+    rows = []
+    for r in table(results, mesh="16x16"):
+        us = (time.time() - t0) * 1e6 / max(len(results), 1)
+        useful = f";useful={r['useful']:.3f}" if r["useful"] else ""
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}_{r['step']}", us,
+            f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};dom={r['dominant']}"
+            + useful))
+    n_multi = sum(1 for r in results if r["mesh"] == "2x16x16")
+    rows.append(("roofline_multipod_lowered", 0.0,
+                 f"combos_ok={n_multi}"))
+    if not rows:
+        rows.append(("roofline_missing", 0.0,
+                     "run launch/dryrun.py --all first"))
+    return rows

@@ -1,0 +1,69 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig6,table2
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("fig2a_gemm_gemv", "benchmarks.gemm_gemv", True),
+    ("fig2b_draft_structures", "benchmarks.draft_structures", True),
+    ("table2_domain_acceptance", "benchmarks.domain_acceptance", True),
+    ("fig3b_confidence", "benchmarks.confidence_acceptance", True),
+    ("fig6_offline_serving", "benchmarks.offline_serving", True),
+    ("fig7_online_serving", "benchmarks.online_serving", True),
+    ("table3_cost_efficiency", "benchmarks.cost_efficiency", True),
+    ("ablation", "benchmarks.ablation", True),
+    ("kernels", "benchmarks.kernel_bench", False),
+    ("roofline", "benchmarks.roofline", False),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated substring filters")
+    ap.add_argument("--skip-fixture", action="store_true",
+                    help="run only benches that need no trained models")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    selected = [(n, m, f) for n, m, f in BENCHES
+                if only is None or any(o in n for o in only)]
+    needs_fixture = any(f for _, _, f in selected) and not args.skip_fixture
+
+    fixture = None
+    if needs_fixture:
+        from benchmarks.common import build_fixture
+        t0 = time.time()
+        print(f"# building/loading benchmark fixture...", file=sys.stderr)
+        fixture = build_fixture(verbose=True)
+        print(f"# fixture ready in {time.time() - t0:.0f}s", file=sys.stderr)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, modname, needs_fx in selected:
+        if needs_fx and fixture is None:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            rows = mod.run(fixture) if needs_fx else mod.run()
+            for r in rows:
+                print(f"{r[0]},{r[1]:.1f},{r[2]}")
+            sys.stdout.flush()
+        except Exception as e:
+            failures += 1
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Multi-pod dry-run example: lower + compile one architecture on the
+512-chip production mesh and print its roofline terms.
+
+  python examples/dryrun_multipod.py --arch qwen2-moe-a2.7b --shape decode_32k
+(no PYTHONPATH juggling needed; must run as its own process so the
+host-device-count flag applies before jax initializes.)
+"""
+import argparse
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-moe-a2.7b")
+    ap.add_argument("--shape", default="decode_32k")
+    args = ap.parse_args()
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    for flags in ([], ["--multi-pod"]):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape] + flags
+        print("$", " ".join(cmd))
+        subprocess.run(cmd, cwd=ROOT, env=env, check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Loop-aware HLO analysis.
+
+XLA's HloCostAnalysis (and naive text scans) count a while-loop body ONCE,
+but scan-over-layers executes it `trip_count` times — so collectives (and
+flops) inside the layer scan are under-counted by ~n_layers. This module
+parses the partitioned HLO text, builds the computation call graph, reads
+`known_trip_count` off every while op, and propagates multipliers from
+ENTRY, yielding trip-corrected collective byte totals.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2)"
+    r"\[([0-9,]*)\]")
+_COMP_START = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALLSITE = re.compile(r"(?:body|to_apply|calls)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        total += size * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo: str) -> Dict[str, List[str]]:
+    """Computation headers sit at column 0 and end with '{'; instructions
+    are indented; '}' at column 0 closes the computation."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = None
+    for raw in hlo.splitlines():
+        if not raw:
+            continue
+        if raw[0] not in " \t":
+            line = raw.strip()
+            if line.endswith("{"):
+                m = _COMP_START.match(line)
+                if m:
+                    cur = m.group(2)
+                    comps[cur] = []
+                    if m.group(1):
+                        entry = cur
+                continue
+            if line == "}":
+                cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(raw.strip())
+    comps["__entry__"] = [entry]  # type: ignore
+    return comps
+
+
+def collective_bytes_corrected(hlo: str) -> Tuple[Dict[str, float],
+                                                  Dict[str, int]]:
+    """Trip-count-corrected {collective: bytes} and {collective: count},
+    summing RESULT-shape bytes of each collective times the product of
+    enclosing while trip counts."""
+    comps = parse_computations(hlo)
+    entry = comps.pop("__entry__")[0]
+
+    # per-computation direct collectives and call edges
+    direct: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    callers: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            rhs = line.split("=", 1)[1] if "=" in line else line
+            is_coll = None
+            for c in COLLECTIVES:
+                if re.search(rf"\b{c}(-start)?\(", rhs):
+                    is_coll = c
+                    break
+            if is_coll:
+                head = rhs.split(is_coll)[0]
+                direct[name].append((is_coll, _shape_bytes(head)))
+                continue
+            trip = 1
+            tm = _TRIP.search(line)
+            if tm:
+                trip = int(tm.group(1))
+            for kw, mult in (("body", trip), ("condition", trip),
+                             ("to_apply", 1), ("calls", 1)):
+                for callee in re.findall(rf"{kw}=%?([\w.\-]+)", line):
+                    callers[callee].append((name, mult))
+            bm = _BRANCHES.search(line)
+            if bm:
+                for callee in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                    callers[callee].append((name, 1))
+
+    # invocation multiplier per computation (HLO call graph is a DAG)
+    memo: Dict[str, float] = {}
+
+    def mult_of(c: str) -> float:
+        if c == entry:
+            return 1.0
+        if c in memo:
+            return memo[c]
+        memo[c] = 0.0  # cycle guard (shouldn't happen)
+        memo[c] = sum(mult_of(p) * m for p, m in callers.get(c, [])) or 1.0
+        return memo[c]
+
+    out = {c: 0.0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    for name, colls in direct.items():
+        for c, nbytes in colls:
+            out[c] += nbytes * max(mult_of(name), 1.0)
+            counts[c] += 1
+    return out, counts

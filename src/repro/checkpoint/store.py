@@ -1,0 +1,81 @@
+"""Msgpack tensor checkpointing (sharding-aware on restore).
+
+Format: one .msgpack file holding {flat_key: {dtype, shape, raw bytes}} +
+a small json-able meta dict. Flat keys are '/'-joined pytree paths, so any
+nested dict/tuple/list params tree round-trips.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        tag = "T" if isinstance(tree, tuple) else "L"
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}__{tag}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def rebuild(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(k.startswith("__T") or k.startswith("__L") for k in keys):
+            seq = [rebuild(node[k]) for k in sorted(
+                keys, key=lambda s: int(s[3:]))]
+            return tuple(seq) if keys[0].startswith("__T") else seq
+        return {k: rebuild(v) for k, v in node.items()}
+
+    return rebuild(root)
+
+
+def save_checkpoint(path: str, params, meta: Optional[dict] = None):
+    flat = _flatten(params)
+    payload = {"__meta__": meta or {}}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        payload[k] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                      "data": arr.tobytes()}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+
+
+def load_checkpoint(path: str, shardings=None):
+    """Restore params; if `shardings` (matching pytree of NamedSharding)
+    is given, each tensor is device_put with its sharding on load."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    meta = payload.pop("__meta__", {})
+    flat = {}
+    for k, spec in payload.items():
+        arr = np.frombuffer(spec["data"], dtype=spec["dtype"]).reshape(
+            spec["shape"])
+        flat[k] = jnp.asarray(arr)
+    params = _unflatten(flat)
+    if shardings is not None:
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), params, shardings)
+    return params, meta

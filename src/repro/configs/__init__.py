@@ -1,0 +1,54 @@
+"""Architecture registry: --arch <id> resolves here."""
+from repro.config import ModelConfig, InputShape, INPUT_SHAPES
+
+from repro.configs.deepseek_v3_671b import CONFIG as _deepseek
+from repro.configs.h2o_danube3_4b import CONFIG as _danube
+from repro.configs.qwen3_32b import CONFIG as _qwen3
+from repro.configs.qwen1_5_4b import CONFIG as _qwen15
+from repro.configs.whisper_small import CONFIG as _whisper
+from repro.configs.llama_3_2_vision_11b import CONFIG as _llama_vision
+from repro.configs.mamba2_130m import CONFIG as _mamba2
+from repro.configs.qwen2_moe_a2_7b import CONFIG as _qwen2_moe
+from repro.configs.qwen2_0_5b import CONFIG as _qwen2_05
+from repro.configs.jamba_v0_1_52b import CONFIG as _jamba
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        _deepseek, _danube, _qwen3, _qwen15, _whisper,
+        _llama_vision, _mamba2, _qwen2_moe, _qwen2_05, _jamba,
+    ]
+}
+
+# long_500k policy (DESIGN.md §5): how each arch gets sub-quadratic decode.
+#   native  — already sub-quadratic (SSM / hybrid / native SWA)
+#   swa     — run with the sliding-window KV variant (window 8192)
+#   skip    — N/A by design (enc-dec whisper)
+LONG_CONTEXT_POLICY: dict[str, str] = {
+    "deepseek-v3-671b": "swa",
+    "h2o-danube3-4b": "native",
+    "qwen3-32b": "swa",
+    "qwen1.5-4b": "swa",
+    "whisper-small": "skip",
+    "llama-3.2-vision-11b": "swa",
+    "mamba2-130m": "native",
+    "qwen2-moe-a2.7b": "swa",
+    "qwen2-0.5b": "swa",
+    "jamba-v0.1-52b": "native",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def arch_shape_pairs() -> list[tuple[str, str]]:
+    """All (arch, shape) combos the dry-run must cover; skips excluded."""
+    pairs = []
+    for arch in ARCHS:
+        for shape in INPUT_SHAPES:
+            if shape == "long_500k" and LONG_CONTEXT_POLICY[arch] == "skip":
+                continue
+            pairs.append((arch, shape))
+    return pairs

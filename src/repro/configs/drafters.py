@@ -1,0 +1,41 @@
+"""Drafter (SSM, "small speculative model") configs for the CoSine
+speculation cluster.
+
+The paper's drafters are LLaMA-68M / Qwen2.5-0.5B-class models fine-tuned
+per domain (Table 2). `llama-68m` mirrors the LLaMA-68M drafter used with
+the paper's LLaMA pair; `tiny-*` are CPU-trainable variants used by the
+runnable examples and tests, where domain specialization is produced by
+actually training each drafter on its own synthetic domain corpus.
+"""
+from repro.config import ModelConfig
+
+LLAMA_68M = ModelConfig(
+    name="llama-68m",
+    family="dense",
+    n_layers=2,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab=32000,
+    rope_theta=10000.0,
+)
+
+
+def tiny_drafter(vocab: int, name: str = "tiny-drafter") -> ModelConfig:
+    """CPU-trainable drafter in the same family as the target."""
+    return ModelConfig(
+        name=name, family="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=2, head_dim=32, d_ff=384, vocab=vocab,
+        tie_embeddings=True,
+    )
+
+
+def tiny_target(vocab: int, name: str = "tiny-target") -> ModelConfig:
+    """CPU-runnable verification target (bigger than the drafters)."""
+    return ModelConfig(
+        name=name, family="dense", n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=4, head_dim=32, d_ff=768, vocab=vocab,
+        tie_embeddings=True,
+    )

@@ -1,0 +1,114 @@
+"""Collaborative pipeline component (paper §4.3, Eq. (5)–(8), Alg. 2):
+batch assignment + adaptive speculation control.
+
+The batch assignment problem (Eq. 8) — minimize T_ttl/b + lambda*Gamma
+subject to the token budget (Eq. 6), latency SLO and memory cap (Eq. 7) —
+is a small 0/1 program re-solved every iteration. We solve it the way the
+paper's 0.1 ms "lightweight LP solver" does: candidate batches are prefixes
+of the length-sorted request list (batched latency is dominated by the
+longest member, so optimal batches are length-contiguous), with
+AdaptiveSpeculation trimming per-request draft counts gamma_i to the
+budget (Alg. 2 lines 17–20).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import CoSineConfig
+from repro.core.latency_model import LatencyModel
+from repro.core.request_pool import Request
+
+
+def adaptive_speculation(gammas: List[int], gamma_max_total: int,
+                         min_gamma: int = 1) -> List[int]:
+    """Alg. 2 AdaptiveSpeculation: while sum gamma_i exceeds Gamma_max,
+    decrement the largest gamma_j (never below min_gamma)."""
+    g = list(gammas)
+    while sum(g) > gamma_max_total:
+        j = int(np.argmax(g))
+        if g[j] <= min_gamma:
+            break
+        g[j] -= 1
+    return g
+
+
+@dataclass
+class BatchPlan:
+    requests: List[Request]
+    gammas: List[int]
+    t_ssm_ms: float
+    t_llm_ms: float
+    t_ttl_ms: float
+    objective: float
+
+    @property
+    def big_gamma(self) -> int:
+        return sum(self.gammas)
+
+
+class RequestScheduler:
+    def __init__(self, cfg: CoSineConfig, lat: LatencyModel,
+                 mem_per_token_bytes: float = 0.0):
+        self.cfg = cfg
+        self.lat = lat
+        self.mem_per_token = mem_per_token_bytes
+
+    def balance_gamma(self, b: int, l: int, n_drafters: int = 1) -> int:
+        """Pipeline-balancing draft length: smallest gamma whose drafting
+        time covers the verification time (keeps the verifier busy without
+        over-drafting — the adaptive speculation control signal)."""
+        for gamma in range(1, 64):
+            t_d = self.lat.t_ssm(b, l, gamma, n_drafters)
+            t_v = self.lat.t_llm(b, l, b * gamma)
+            if t_d >= t_v:
+                return gamma
+        return 64
+
+    def plan(self, requests: Sequence[Request], pipelined: bool = True,
+             n_drafters: int = 1) -> BatchPlan:
+        """Solve Eq. (8) over length-sorted prefixes."""
+        cfg = self.cfg
+        cand = sorted(requests, key=lambda r: (r.context_len, r.arrival_ms))
+        cand = cand[: 4 * cfg.max_batch]          # bound the search
+        best: BatchPlan | None = None
+        for b in range(1, min(len(cand), cfg.max_batch) + 1):
+            sel = cand[:b]
+            l = max(r.context_len for r in sel)
+            gam = adaptive_speculation([r.gamma for r in sel],
+                                       cfg.gamma_max_total, cfg.min_gamma)
+            big_g = sum(gam)
+            t_ssm = self.lat.t_ssm(b, l, max(gam), n_drafters)
+            t_llm = self.lat.t_llm(b, l, big_g)
+            t_ttl = (max(t_ssm + self.lat.comm_ms, t_llm) if pipelined
+                     else t_ssm + self.lat.comm_ms + t_llm)
+            if t_ttl > cfg.t_max_ms:
+                continue
+            mem = sum(r.context_len + g for r, g in zip(sel, gam)) \
+                * self.mem_per_token
+            if mem > cfg.m_max_bytes:
+                continue
+            # Eq. (8): latency-per-request with a verified-token budget term.
+            obj = t_ttl / b + cfg.lam * big_g
+            plan = BatchPlan(sel, gam, t_ssm, t_llm, t_ttl, obj)
+            if best is None or obj < best.objective:
+                best = plan
+        if best is None and cand:   # SLO-infeasible: serve the shortest alone
+            r = cand[0]
+            g = [max(self.cfg.min_gamma, min(r.gamma, self.cfg.gamma_max_total))]
+            t_ssm = self.lat.t_ssm(1, r.context_len, g[0], n_drafters)
+            t_llm = self.lat.t_llm(1, r.context_len, g[0])
+            best = BatchPlan([r], g, t_ssm, t_llm,
+                             t_ssm + self.lat.comm_ms + t_llm, float("inf"))
+        return best
+
+    def update_gamma_feedback(self, request: Request, n_committed: int,
+                              verifier_busy_frac: float):
+        """Alg. 2 adaptive control: grow gamma when the verifier has slack
+        and drafts are being accepted; shrink when overloaded/rejected."""
+        if verifier_busy_frac < 0.8 and n_committed >= request.gamma:
+            request.gamma = min(request.gamma + 1, 16)
+        elif verifier_busy_frac > 1.2 or n_committed <= 1:
+            request.gamma = max(request.gamma - 1, self.cfg.min_gamma)

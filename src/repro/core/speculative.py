@@ -1,0 +1,93 @@
+"""Speculative verification: distribution-preserving rejection sampling
+(Leviathan et al., the paper's §2.1 acceptance mechanism) plus the greedy
+variant used for the paper's experiments (§6.1: greedy sampling for both
+draft generation and verification).
+
+Alignment convention: `target_logits[:, i]` is the target distribution for
+draft token i, i.e. conditioned on everything *before* it (the engine
+assembles this from the previous step's tail logits + the verify pass);
+`bonus_logits` is the distribution after the last draft token.
+
+All functions are vectorized over the batch and jit-friendly (fixed
+shapes; acceptance counts are data, not shapes).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def accept_counts_greedy(draft_tokens, target_argmax):
+    """Greedy acceptance: token i is accepted iff every token <= i matches
+    the target argmax. draft_tokens, target_argmax: (B, G) -> (B,) counts."""
+    match = (draft_tokens == target_argmax)
+    return jnp.cumprod(match.astype(jnp.int32), axis=-1).sum(axis=-1)
+
+
+def verify_greedy(draft_tokens, target_logits, bonus_logits):
+    """Greedy speculative verification.
+
+    draft_tokens: (B, G); target_logits: (B, G, V); bonus_logits: (B, V).
+    Returns:
+      out_tokens (B, G+1): accepted prefix + 1 correction/bonus token
+      n_out (B,): number of valid tokens (n_accepted + 1)
+    Matches incremental greedy decoding exactly (losslessness invariant).
+    """
+    B, G = draft_tokens.shape
+    full = jnp.concatenate([target_logits, bonus_logits[:, None]], axis=1)
+    tgt = jnp.argmax(full, axis=-1)                             # (B, G+1)
+    n_acc = accept_counts_greedy(draft_tokens, tgt[:, :G])      # (B,)
+    fix = jnp.take_along_axis(tgt, n_acc[:, None], axis=1)[:, 0]
+    out = jnp.concatenate([draft_tokens, jnp.zeros((B, 1), draft_tokens.dtype)],
+                          axis=1)
+    out = out.at[jnp.arange(B), n_acc].set(fix)
+    return out, n_acc + 1
+
+
+def verify_rejection(key, draft_tokens, draft_logprobs, target_logits,
+                     bonus_logits, temperature: float = 1.0):
+    """Stochastic rejection-sampling verification (lossless in
+    distribution).
+
+    draft_tokens:   (B, G) tokens sampled from the drafter(s)
+    draft_logprobs: (B, G, V) drafter log-distributions at each position
+    target_logits:  (B, G, V); bonus_logits: (B, V)
+    Accept token i with prob min(1, p(x)/q(x)); at the first rejection
+    resample from norm(max(0, p - q)); if all accepted, sample the bonus
+    token from the target's post-draft distribution.
+
+    Returns (out_tokens (B, G+1), n_out (B,)).
+    """
+    B, G, V = target_logits.shape
+    p = jax.nn.softmax(target_logits.astype(jnp.float32) / temperature, -1)
+    q = jnp.exp(draft_logprobs.astype(jnp.float32))
+
+    p_tok = jnp.take_along_axis(p, draft_tokens[..., None], -1)[..., 0]  # (B,G)
+    q_tok = jnp.take_along_axis(q, draft_tokens[..., None], -1)[..., 0]
+    k_acc, k_res = jax.random.split(key)
+    u = jax.random.uniform(k_acc, (B, G))
+    accept = u < jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-20))
+    n_acc = jnp.cumprod(accept.astype(jnp.int32), -1).sum(-1)            # (B,)
+
+    # residual distribution at the first rejected position
+    idx = jnp.minimum(n_acc, G - 1)
+    take = lambda a: jnp.take_along_axis(
+        a, idx[:, None, None].repeat(V, -1), 1)[:, 0]
+    resid = jnp.maximum(take(p) - take(q), 0.0)
+    # all-accepted rows instead sample the bonus token from the target
+    p_bonus = jax.nn.softmax(bonus_logits.astype(jnp.float32) / temperature, -1)
+    resid = jnp.where((n_acc == G)[:, None], p_bonus, resid)
+    resid = resid / jnp.maximum(resid.sum(-1, keepdims=True), 1e-20)
+    fix = jax.random.categorical(k_res, jnp.log(jnp.maximum(resid, 1e-30)))
+
+    out = jnp.concatenate([draft_tokens, jnp.zeros((B, 1), draft_tokens.dtype)],
+                          axis=1)
+    out = out.at[jnp.arange(B), n_acc].set(fix)
+    return out, n_acc + 1
+
+
+def sample_from_logits(key, logits, temperature: float = 0.0):
+    """Greedy (temperature 0) or categorical sampling. logits: (..., V)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)

@@ -1,0 +1,232 @@
+"""Divisibility-aware sharding rules (DESIGN.md §6).
+
+Rules map parameter/cache pytree paths to PartitionSpecs:
+
+  train  — FSDP on "data" (weight matrices sharded on their non-TP dim),
+           tensor parallel on "model", "pod" = extra data parallelism.
+  serve  — tensor parallel on "model"; experts expert-parallel on "data"
+           when the expert count divides it; batch ("pod","data") on
+           activations and KV caches.
+
+A dim is sharded on an axis only when divisible — otherwise the rule
+degrades to replication on that axis (e.g. qwen1.5-4b's 20 heads, whisper's
+12 heads, qwen2-moe's 60 experts). Head-count nondivisibility is recovered
+where the *flattened* projection dim divides the axis.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from repro.config import ModelConfig
+from repro.models import model as M
+
+
+def _path_names(path):
+    names = []
+    for p in path:
+        if isinstance(p, DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, SequenceKey):
+            names.append(f"#{p.idx}")
+    return names
+
+
+def _div(size: int, mesh, axis: Optional[str]):
+    """axis if it divides size else None."""
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if size % mesh.shape[axis] == 0 else None
+
+
+def _leaf_spec(names, shape, mesh, mode: str, moe_axis: str = "data",
+               cfg=None, head_align: bool = False):
+    """PartitionSpec for one param leaf (pre-stacking shape)."""
+    name = names[-1]
+    fsdp = "data" if mode == "train" else None
+    tp = "model"
+
+    def d(i, axis):  # shard dim i on axis if divisible
+        return _div(shape[i], mesh, axis)
+
+    def d_heads(i, axis, n_heads):
+        """shard dim i only when whole heads land on each shard — slicing a
+        head across shards makes every score einsum a partial-sum
+        all-reduce of the full (B,T,H,S) tensor (§Perf H-align)."""
+        if head_align and cfg is not None and axis in mesh.axis_names                 and n_heads % mesh.shape[axis] != 0:
+            return None
+        return d(i, axis)
+
+    if name == "embed":
+        return P(d(0, tp), d(1, fsdp))
+    if name == "head":
+        return P(d(0, fsdp), d(1, tp))
+    if name == "pos":
+        return P(None, None)
+    if name == "wq":
+        nh = cfg.n_heads if cfg else 0
+        return P(d(0, fsdp), d_heads(1, tp, nh))
+    if name in ("wk", "wv"):
+        nh = cfg.n_kv_heads if cfg else 0
+        return P(d(0, fsdp), d_heads(1, tp, nh))
+    if name == "wo":
+        nh = cfg.n_heads if cfg else 0
+        return P(d_heads(0, tp, nh), d(1, fsdp))
+    if name in ("wg", "wu", "wi"):
+        return P(d(0, fsdp), d(1, tp))
+    if name in ("wd",):
+        return P(d(0, tp), d(1, fsdp))
+    if name == "router":
+        return P(d(0, fsdp), None)
+    if name in ("w_gate", "w_up"):
+        if moe_axis == "model":
+            # expert parallelism on the TP axis: tokens are replicated
+            # across "model", so each shard runs its local experts and the
+            # combine is a small all-reduce (§Perf H2)
+            return P(d(0, "model"), d(1, fsdp), None)
+        ep = d(0, "data")
+        return P(ep, d(1, fsdp) if ep is None else None, d(2, tp))
+    if name == "w_down":
+        if moe_axis == "model":
+            return P(d(0, "model"), None, d(2, fsdp))
+        ep = d(0, "data")
+        return P(ep, d(1, tp), d(2, fsdp) if ep is None else None)
+    # --- MLA ---
+    if name == "wdq":
+        return P(d(0, fsdp), None)
+    if name == "wuq":
+        return P(d(0, fsdp), d(1, tp))
+    if name == "wdkv":
+        return P(d(0, fsdp), None)
+    if name == "wkr":
+        return P(d(0, fsdp), None)
+    if name in ("wuk", "wuv"):
+        return P(d(0, fsdp), d(1, tp))
+    # --- SSM (baseline: FSDP only; TP for SSD is a hillclimb lever) ---
+    if name == "in_proj":
+        return P(d(0, fsdp), None)
+    if name == "out_proj":
+        return P(None, d(1, fsdp))
+    if name == "proj":  # mtp projection
+        return P(d(0, fsdp), d(1, tp))
+    # everything else (norms, biases, conv, A_log, dt_bias, ...): replicate
+    return P()
+
+
+def _is_stacked(names) -> bool:
+    """Stage-stacked leaves carry a leading (repeats,) dim."""
+    if names and names[0] == "stages":
+        return True
+    if "encoder" in names and "stage" in names:
+        return True
+    return False
+
+
+def param_specs(cfg: ModelConfig, mesh, mode: str = "train",
+                moe_axis: str = "data", head_align: bool = False):
+    """Pytree of PartitionSpec matching init_params(cfg) structure."""
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        shape = leaf.shape
+        if _is_stacked(names):
+            base = _leaf_spec(names, shape[1:], mesh, mode, moe_axis,
+                              cfg, head_align)
+            return P(None, *base)
+        return _leaf_spec(names, shape, mesh, mode, moe_axis, cfg, head_align)
+
+    return jax.tree_util.tree_map_with_path(spec, shapes)
+
+
+# ---------------------------------------------------------------- caches
+
+def _cache_leaf_spec(names, shape, mesh, cfg: ModelConfig, batch_axes,
+                     kv_shard: str = "auto"):
+    """Cache leaves are stage-stacked: (reps, B, ...)."""
+    name = names[-1]
+    bax = batch_axes if shape[1] % _axes_size(mesh, batch_axes) == 0 else None
+    if name == "lengths":
+        return P(bax)
+    if name in ("k", "v"):
+        hkv, hd = shape[3], shape[4]
+        if kv_shard == "seq" and _div(shape[2], mesh, "model"):
+            # sequence-parallel KV (flash-decoding partial merge — §Perf)
+            return P(None, bax, "model", None, None)
+        # (reps, B, C, Hkv, D): heads on model if divisible, else head_dim
+        if _div(hkv, mesh, "model"):
+            return P(None, bax, None, "model", None)
+        if _div(hd, mesh, "model"):
+            return P(None, bax, None, None, "model")
+        return P(None, bax, None, None, None)
+    if name in ("k_scale", "v_scale"):
+        hkv = shape[3]
+        if kv_shard == "seq" and _div(shape[2], mesh, "model"):
+            return P(None, bax, "model", None)
+        if _div(hkv, mesh, "model"):
+            return P(None, bax, None, "model")
+        return P(None, bax, None, None)
+    if name == "slot_pos":
+        if kv_shard == "seq" and _div(shape[2], mesh, "model"):
+            return P(None, bax, "model")
+        return P(None, bax, None)
+    if name == "ssm":
+        h = shape[2]
+        return P(None, bax, _div(h, mesh, "model"), None, None)
+    if name == "conv":
+        return P(None, bax, None, None)
+    if name == "pos":
+        return P(None, bax)
+    return P()
+
+
+def _axes_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_specs(cfg: ModelConfig, mesh, batch: int, max_len: int,
+                dtype=jnp.bfloat16, kv_shard: str = "auto"):
+    """(shapes, specs) for the decode cache of (cfg, batch, max_len).
+    kv_shard: "auto" (heads, then head_dim) | "seq" (capacity dim on
+    "model" — pair with cfg.decode_attn == "parallel")."""
+    shapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, batch, max_len, dtype=dtype))
+    bax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bax = bax if batch % _axes_size(mesh, bax) == 0 else (
+        ("data",) if batch % mesh.shape["data"] == 0 else None)
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        if names[-1] == "lengths" and len(names) == 1:
+            return P(bax if bax and leaf.shape[0] % _axes_size(mesh, bax) == 0
+                     else None)
+        return _cache_leaf_spec(names, leaf.shape, mesh, cfg, bax, kv_shard)
+
+    return shapes, jax.tree_util.tree_map_with_path(spec, shapes)
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh, global_batch: int):
+    """PartitionSpec axis tuple for the batch dim of activations/tokens."""
+    bax = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if global_batch % _axes_size(mesh, bax) == 0:
+        return bax
+    if global_batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None

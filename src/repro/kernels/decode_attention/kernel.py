@@ -1,0 +1,11 @@
+"""Flash-decode Pallas kernel (TPU): the `pl.pallas_call` + BlockSpec
+construction lives in `repro.kernels.common.flash_attention_partial`
+(shared with tree_attention). This module pins the decode specialization:
+the GQA group is the row dimension (q block = (G, Dk), G padded to 8), KV
+streams in long blocks (default 512) to maximize HBM read efficiency —
+the decode step is memory-roofline-bound (DESIGN.md §3.2).
+"""
+from repro.kernels.common import (flash_attention_partial, merge_partials,
+                                  _make_kernel)
+
+__all__ = ["flash_attention_partial", "merge_partials", "_make_kernel"]

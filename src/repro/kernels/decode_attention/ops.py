@@ -1,0 +1,24 @@
+"""jit'd wrapper: GQA flash-decode. The query token's GQA group becomes the
+kernel's row dimension (classic flash-decoding layout), so the MXU sees a
+(G x Dk) x (Dk x block_k) matmul per KV block instead of a GEMV."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import flash_attention_partial, merge_partials
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "interpret", "block_k"))
+def decode_attention(q, k_cache, v_cache, cache_pos, q_pos, *, scale,
+                     window=0, interpret=True, block_k=512):
+    """Same signature/semantics as ref.decode_attention_ref (docs there)."""
+    B, H, G, Dk = q.shape
+    qpos_rows = jnp.broadcast_to(q_pos[:, None], (B, G))
+    part = flash_attention_partial(
+        q, k_cache, v_cache, qpos_rows, cache_pos, scale=scale, causal=True,
+        window=window, block_q=max(8, G), block_k=block_k,
+        interpret=interpret)
+    return merge_partials([part])

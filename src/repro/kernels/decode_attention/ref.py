@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token (GQA flash-decode) attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_pos, q_pos, *,
+                         scale, window=0):
+    """q: (B, Hkv, G, Dk) one token's queries (G = GQA group);
+    k_cache/v_cache: (B, Hkv, S, Dk/Dv); cache_pos (B, S); q_pos (B,).
+    Returns (B, Hkv, G, Dv) f32."""
+    s = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    valid = (cache_pos >= 0)[:, None, None, :] & \
+        (cache_pos[:, None, None, :] <= q_pos[:, None, None, None])
+    if window > 0:
+        valid = valid & (q_pos[:, None, None, None]
+                         - cache_pos[:, None, None, :] < window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))

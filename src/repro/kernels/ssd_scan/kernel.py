@@ -1,0 +1,97 @@
+"""Mamba2 SSD chunked-scan Pallas kernel (TPU target).
+
+Layout: grid (B, n_head_blocks, n_chunks); the chunk dimension is
+sequential ("arbitrary") and the (head_block, P, N) recurrent state lives
+in VMEM scratch across chunk iterations — the inter-chunk recurrence never
+round-trips HBM. Within a chunk the dual ("attention-like") form runs on
+the MXU: (Q x N) x (N x Q) score matmuls and (Q x Q) x (Q x P) output
+matmuls, Q = chunk_size (default 128, MXU-aligned).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_ssd_kernel(*, Q, hb, P, N, nc):
+    def kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, init_ref,
+               y_ref, final_ref, state_s):
+        ci = pl.program_id(2)
+
+        @pl.when(ci == 0)
+        def _init():
+            state_s[...] = init_ref[0].astype(jnp.float32)
+
+        x = x_ref[0].astype(jnp.float32)          # (Q, hb, P)
+        dt = dt_ref[0].astype(jnp.float32)        # (Q, hb)
+        A = a_ref[...].astype(jnp.float32)        # (hb,)
+        Bm = b_ref[0].astype(jnp.float32)         # (Q, hb, N)
+        Cm = c_ref[0].astype(jnp.float32)         # (Q, hb, N)
+
+        dA = dt * A[None, :]                      # (Q, hb) negative
+        dAc = jnp.cumsum(dA, axis=0)              # (Q, hb)
+
+        seg = dAc[:, None, :] - dAc[None, :, :]   # (Q, Q, hb)
+        causal = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+        Lmat = jnp.where(causal[:, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("qhn,khn->qkh", Cm, Bm) * Lmat
+        xdt = x * dt[:, :, None]
+        y_intra = jnp.einsum("qkh,khp->qhp", scores, xdt)
+
+        state = state_s[...]                       # (hb, P, N)
+        y_inter = jnp.einsum("qhn,hpn->qhp", Cm, state) \
+            * jnp.exp(dAc)[:, :, None]
+        y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+        chunk_decay = jnp.exp(dAc[Q - 1])          # (hb,)
+        decay_to_end = jnp.exp(dAc[Q - 1][None, :] - dAc)  # (Q, hb)
+        state_add = jnp.einsum("qhn,qh,qhp->hpn", Bm, decay_to_end * dt, x)
+        state_s[...] = state * chunk_decay[:, None, None] + state_add
+
+        @pl.when(ci == nc - 1)
+        def _final():
+            final_ref[0] = state_s[...].astype(final_ref.dtype)
+
+    return kernel
+
+
+def ssd_scan_pallas(x, dt, A, Bh, Ch, chunk, initial_state,
+                    head_block: int = 8, interpret: bool = True):
+    """x: (b, L, H, P); dt: (b, L, H); A: (H,); Bh/Ch: (b, L, H, N)
+    (groups pre-broadcast to heads); initial_state: (b, H, P, N).
+    L must be a multiple of `chunk` (ops.py pads). Returns (y, final)."""
+    b, L, H, P = x.shape
+    N = Bh.shape[-1]
+    hb = min(head_block, H)
+    assert H % hb == 0 and L % chunk == 0
+    nc = L // chunk
+    grid = (b, H // hb, nc)
+
+    kernel = _make_ssd_kernel(Q=chunk, hb=hb, P=P, N=N, nc=nc)
+    y, final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hb, P), lambda i, j, c: (i, c, j, 0)),
+            pl.BlockSpec((1, chunk, hb), lambda i, j, c: (i, c, j)),
+            pl.BlockSpec((hb,), lambda i, j, c: (j,)),
+            pl.BlockSpec((1, chunk, hb, N), lambda i, j, c: (i, c, j, 0)),
+            pl.BlockSpec((1, chunk, hb, N), lambda i, j, c: (i, c, j, 0)),
+            pl.BlockSpec((1, hb, P, N), lambda i, j, c: (i, j, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hb, P), lambda i, j, c: (i, c, j, 0)),
+            pl.BlockSpec((1, hb, P, N), lambda i, j, c: (i, j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bh, Ch, initial_state)
+    return y, final

@@ -1,0 +1,4 @@
+"""Oracle for the SSD kernel: the naive O(L) recurrence from
+`repro.models.ssm.ssd_reference` (h_t = exp(dt A) h_{t-1} + dt B x_t;
+y_t = C h_t), plus the pure-jnp chunked form for cross-checks."""
+from repro.models.ssm import ssd_reference, ssd_chunked  # noqa: F401

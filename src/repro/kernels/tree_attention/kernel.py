@@ -1,0 +1,13 @@
+"""Tree-attention Pallas kernel (TPU): the `pl.pallas_call` + BlockSpec
+construction lives in `repro.kernels.common.flash_attention_partial`
+(shared with decode_attention). This module pins the tree-verification
+specialization: masked segment pass + cache pass, 128-aligned blocks.
+
+Grid: (B, Hkv, n_q_blocks, n_kv_blocks), last dim sequential ("arbitrary"),
+VMEM scratch carries (m, l, acc) across KV blocks; the tree ancestor mask
+streams in (block_q, block_k) tiles.
+"""
+from repro.kernels.common import (flash_attention_partial, merge_partials,
+                                  _make_kernel)
+
+__all__ = ["flash_attention_partial", "merge_partials", "_make_kernel"]

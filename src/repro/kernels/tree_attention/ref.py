@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for tree-attention verification."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def tree_attention_ref(q, k_cache, v_cache, cache_pos, k_seg, v_seg,
+                       q_pos, seg_mask, *, scale, window=0):
+    """q: (B, Hkv, R, Dk) rows = draft-tree nodes x GQA group;
+    k_cache/v_cache: (B, Hkv, S, Dk/Dv) with slot positions cache_pos (B,S);
+    k_seg/v_seg: (B, Hkv, M, Dk/Dv) fresh tree-node KV; seg_mask (B, R, M)
+    ancestor mask. Returns (B, Hkv, R, Dv) f32."""
+    qf = q.astype(jnp.float32)
+
+    s_hist = jnp.einsum("bhrd,bhsd->bhrs", qf, k_cache.astype(jnp.float32)) * scale
+    valid = (cache_pos >= 0)[:, None, None, :] & \
+        (cache_pos[:, None, None, :] <= q_pos[:, None, :, None])
+    if window > 0:
+        valid = valid & (q_pos[:, None, :, None] - cache_pos[:, None, None, :]
+                         < window)
+    s_hist = jnp.where(valid, s_hist, NEG_INF)
+
+    s_seg = jnp.einsum("bhrd,bhmd->bhrm", qf, k_seg.astype(jnp.float32)) * scale
+    s_seg = jnp.where(seg_mask[:, None], s_seg, NEG_INF)
+
+    s = jnp.concatenate([s_hist, s_seg], axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    vv = jnp.concatenate([v_cache, v_seg], axis=2).astype(jnp.float32)
+    return jnp.einsum("bhrs,bhsd->bhrd", p, vv)

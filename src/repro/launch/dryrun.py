@@ -1,0 +1,401 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) on the production meshes, record
+memory/cost/collective analysis for the roofline (deliverable g).
+
+The two lines above MUST stay the first statements in this file — jax
+locks the device count on first init (see the brief).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape decode_32k --multi-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--step verify]
+Writes experiments/dryrun/<arch>__<shape>__<mesh>[__verify].json
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import INPUT_SHAPES, ModelConfig
+from repro.configs import ARCHS, LONG_CONTEXT_POLICY, get_config
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.optim.optimizers import adamw, apply_updates, sgd
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# hardware constants (brief): TPU v5e
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def resolve_config(arch: str, shape: str, variant: str = "") -> ModelConfig:
+    """variant: comma-list of perf levers (EXPERIMENTS.md §Perf):
+      parallel — flash-decoding parallel-partial attention
+      seqkv    — sequence-parallel KV sharding (pairs with parallel)
+      int8     — int8-quantized KV cache
+    """
+    cfg = get_config(arch)
+    if shape == "long_500k" and LONG_CONTEXT_POLICY[arch] == "swa":
+        cfg = cfg.with_overrides(long_context="swa")
+    v = set(filter(None, variant.split(",")))
+    if "parallel" in v or "seqkv" in v:
+        cfg = cfg.with_overrides(decode_attn="parallel")
+    if "int8" in v:
+        cfg = cfg.with_overrides(kv_dtype="int8")
+    if "moegather" in v:
+        cfg = cfg.with_overrides(moe_dispatch="gather_tokens")
+    return cfg
+
+
+def frontend_struct(cfg: ModelConfig, batch: int):
+    if cfg.n_frontend_tokens:
+        return jax.ShapeDtypeStruct((batch, cfg.n_frontend_tokens,
+                                     cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def param_structs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating) else s.dtype),
+        shapes)
+
+
+def n_params_of(cfg: ModelConfig) -> int:
+    import math
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    return sum(math.prod(s.shape) for s in jax.tree.leaves(shapes))
+
+
+def active_params_of(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: shared + top_k routed)."""
+    total = n_params_of(cfg)
+    if cfg.moe is None:
+        return total
+    moe = cfg.moe
+    n_moe_layers = sum(1 for i in range(cfg.n_layers) if cfg.is_moe_layer(i))
+    per_expert = 3 * cfg.d_model * moe.d_ff
+    inactive = n_moe_layers * (moe.n_routed - moe.top_k) * per_expert
+    return total - inactive
+
+
+# --------------------------------------------------------------- step fns
+
+def make_step(cfg: ModelConfig, shape_name: str, mesh, step_kind: str,
+              variant: str = ""):
+    """Returns (fn, arg_structs, in_shardings)."""
+    v = set(filter(None, variant.split(",")))
+    ishape = INPUT_SHAPES[shape_name]
+    B, S = ishape.global_batch, ishape.seq_len
+    bspec = sh.batch_spec(mesh, B)
+    mode = "train" if step_kind == "train" else "serve"
+    pspecs = sh.param_specs(cfg, mesh, mode=mode,
+                            moe_axis="model" if "epmodel" in v else "data",
+                            head_align="headalign" in v)
+    pstructs = param_structs(cfg, jnp.bfloat16)
+    p_shard = sh.to_named(pspecs, mesh)
+    fe = frontend_struct(cfg, B)
+    fe_shard = NamedSharding(mesh, P(bspec, None, None)) if fe is not None else None
+
+    if step_kind == "train":
+        big = n_params_of(cfg) > 10_000_000_000
+        opt = sgd(lr=1e-3, momentum=0.0) if big else adamw(1e-4)
+
+        def train_step(params, opt_state, tokens, frontend=None):
+            (loss, parts), grads = jax.value_and_grad(M.lm_loss, has_aux=True)(
+                params, cfg, tokens, frontend=frontend, remat=True)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, loss
+
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        t_shard = NamedSharding(mesh, P(bspec, None))
+        if big:
+            opt_structs, o_shard = None, None
+        else:
+            f32 = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), pstructs)
+            opt_structs = {"m": f32, "v": f32,
+                           "t": jax.ShapeDtypeStruct((), jnp.int32)}
+            o_shard = {"m": p_shard, "v": p_shard,
+                       "t": NamedSharding(mesh, P())}
+        args = [pstructs, opt_structs, tokens]
+        shards = [p_shard, o_shard, t_shard]
+        if fe is not None:
+            args.append(fe)
+            shards.append(fe_shard)
+        return train_step, args, shards
+
+    # serving steps need a cache
+    if shape_name == "long_500k":
+        from repro.models.model import effective_window
+        win = effective_window(cfg)
+        cap = (win + 128) if win else S + 128
+    else:
+        cap = S + 128
+    if "seqkv" in v:
+        n_model = mesh.shape["model"]
+        cap = ((cap + n_model - 1) // n_model) * n_model
+        cfg = cfg.with_overrides(decode_block=cap // n_model)
+    cache_structs, cspecs = sh.cache_specs(
+        cfg, mesh, B, cap, dtype=jnp.bfloat16,
+        kv_shard="seq" if "seqkv" in v else "auto")
+    c_shard = sh.to_named(cspecs, mesh)
+
+    if step_kind == "prefill":
+        def prefill_step(params, tokens, frontend=None):
+            cache = M.init_cache(cfg, B, cap, dtype=jnp.bfloat16)
+            logits, cache, _ = M.prefill(params, cfg, tokens, cache,
+                                         frontend=frontend)
+            return logits[:, -1], cache
+
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        t_shard = NamedSharding(mesh, P(bspec, None))
+        args = [pstructs, tokens]
+        shards = [p_shard, t_shard]
+        if fe is not None:
+            args.append(fe)
+            shards.append(fe_shard)
+        return prefill_step, args, shards
+
+    if step_kind == "decode":
+        def serve_step(params, tokens, cache):
+            logits, cache, _ = M.decode_step(params, cfg, tokens, cache)
+            return logits, cache
+
+        tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        t_shard = NamedSharding(mesh, P(bspec, None))
+        return serve_step, [pstructs, tokens, cache_structs], \
+            [p_shard, t_shard, c_shard]
+
+    if step_kind == "verify":
+        GAMMA = 16  # CoSine tree nodes per request per iteration
+
+        def verify_step(params, tokens, cache):
+            logits, _, _ = M.verify_chunk(params, cfg, tokens, cache,
+                                          write=False)
+            return logits
+
+        tokens = jax.ShapeDtypeStruct((B, GAMMA), jnp.int32)
+        t_shard = NamedSharding(mesh, P(bspec, None))
+        return verify_step, [pstructs, tokens, cache_structs], \
+            [p_shard, t_shard, c_shard]
+
+    raise KeyError(step_kind)
+
+
+# --------------------------------------------------------------- analysis
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op in the partitioned HLO."""
+    out = {c: 0.0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    shape_re = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                          r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = None
+        for c in COLLECTIVES:
+            if re.search(rf"\b{c}(-start|-done)?\(", rhs):
+                op = c
+                break
+        if op is None or f"{op}-done(" in rhs:
+            continue
+        # result shapes appear before the op name
+        head = rhs.split(op)[0]
+        nbytes = 0
+        for dt, dims in shape_re.findall(head):
+            size = 1
+            for d in dims.split(","):
+                if d:
+                    size *= int(d)
+            nbytes += size * DTYPE_BYTES[dt]
+        out[op] += nbytes
+        counts[op] += 1
+    return out, counts
+
+
+def step_kind_for(shape_name: str) -> str:
+    return {"train": "train", "prefill": "prefill",
+            "decode": "decode"}[INPUT_SHAPES[shape_name].kind]
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            step_override: str | None = None, out_dir: str = "experiments/dryrun",
+            save_hlo: bool = False, variant: str = "") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = resolve_config(arch, shape_name, variant)
+    kind = step_override or step_kind_for(shape_name)
+    t0 = time.time()
+    fn, args, shards = make_step(cfg, shape_name, mesh, kind, variant)
+
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=tuple(shards))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll_raw, _ = collective_bytes(hlo)
+    from repro.analysis.hlo import collective_bytes_corrected
+    coll, coll_counts = collective_bytes_corrected(hlo)
+
+    n_chips = mesh.devices.size
+    ishape = INPUT_SHAPES[shape_name]
+    flops_hlo = float(cost.get("flops", 0.0))
+    bytes_hlo = float(cost.get("bytes accessed", 0.0))
+    total_coll = sum(coll.values())      # per-device, trip-corrected
+
+    n_total = n_params_of(cfg)
+    n_active = active_params_of(cfg)
+    if kind == "train":
+        tokens_processed = ishape.global_batch * ishape.seq_len
+        model_flops = 6 * n_active * tokens_processed
+    elif kind == "prefill":
+        tokens_processed = ishape.global_batch * ishape.seq_len
+        model_flops = 2 * n_active * tokens_processed
+    else:
+        tokens_processed = ishape.global_batch * (16 if kind == "verify" else 1)
+        model_flops = 2 * n_active * tokens_processed
+
+    # Primary terms: analytic closed forms (XLA cost analysis counts scan
+    # bodies once -> under-counts by ~n_layers; see analysis/analytic.py).
+    from repro.analysis.analytic import estimate
+    est = estimate(cfg, shape_name, kind, n_active, n_total)
+    compute_s = est.flops / (n_chips * PEAK_FLOPS)
+    memory_s = est.hbm_bytes / (n_chips * HBM_BW)
+    # corrected collective bytes are from the per-device program; each
+    # chip pushes its share over its own links
+    collective_s = total_coll / ICI_BW
+
+    result = {
+        "arch": arch, "shape": shape_name, "step": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "n_chips": int(n_chips),
+        "ok": True,
+        "t_lower_s": round(t_lower, 2), "t_compile_s": round(t_compile, 2),
+        "n_params": n_total, "n_active_params": n_active,
+        "analytic": {"flops_global": est.flops,
+                     "hbm_bytes_global": est.hbm_bytes},
+        "per_device": {
+            "hlo_flops_scanbody_once": flops_hlo,
+            "hlo_bytes_scanbody_once": bytes_hlo,
+            "collective_bytes_corrected": coll,
+            "collective_bytes_raw": coll_raw,
+            "collective_counts": coll_counts,
+            "collective_bytes_total": total_coll,
+        },
+        "memory_analysis": {
+            k: getattr(mem, k, None) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")
+        } if mem is not None else None,
+        "roofline": {
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": max(
+                [("compute", compute_s), ("memory", memory_s),
+                 ("collective", collective_s)], key=lambda kv: kv[1])[0],
+        },
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": (model_flops / est.flops
+                               if est.flops else None),
+    }
+
+    result["variant"] = variant
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if step_override is None else f"__{step_override}"
+    if variant:
+        suffix += f"__v-{variant.replace(',', '+')}"
+    name = f"{arch}__{shape_name}__{result['mesh']}{suffix}"
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(out_dir, name + ".hlo"), "w") as f:
+            f.write(hlo)
+    print(f"[dryrun] {name}: OK lower={t_lower:.1f}s compile={t_compile:.1f}s "
+          f"dominant={result['roofline']['dominant']}")
+    if mem is not None:
+        print(f"  memory_analysis: args={getattr(mem, 'argument_size_in_bytes', None)} "
+              f"temp={getattr(mem, 'temp_size_in_bytes', None)} "
+              f"out={getattr(mem, 'output_size_in_bytes', None)}")
+    print(f"  analytic: flops={est.flops:.3e} hbm={est.hbm_bytes:.3e} "
+          f"coll/dev={total_coll:.3e}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--step", type=str, default=None,
+                    help="override step kind (e.g. verify)")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", type=str, default="",
+                    help="comma list: parallel,seqkv,int8 (§Perf levers)")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import arch_shape_pairs
+        failures = []
+        for arch, shape in arch_shape_pairs():
+            mesh_name = "2x16x16" if args.multi_pod else "16x16"
+            suffix = "" if args.step is None else f"__{args.step}"
+            if args.variant:
+                suffix += f"__v-{args.variant.replace(',', '+')}"
+            path = os.path.join(args.out,
+                                f"{arch}__{shape}__{mesh_name}{suffix}.json")
+            if args.skip_existing and os.path.exists(path):
+                continue
+            try:
+                run_one(arch, shape, args.multi_pod, args.step, args.out,
+                        args.save_hlo, args.variant)
+            except Exception as e:
+                failures.append((arch, shape, repr(e)))
+                print(f"[dryrun] {arch}/{shape} FAILED: {e}")
+                traceback.print_exc()
+        if failures:
+            print(f"{len(failures)} FAILURES:")
+            for f in failures:
+                print(" ", f)
+            raise SystemExit(1)
+        print("all combos lowered + compiled OK")
+    else:
+        run_one(args.arch, args.shape, args.multi_pod, args.step, args.out,
+                args.save_hlo, args.variant)
+
+
+if __name__ == "__main__":
+    main()

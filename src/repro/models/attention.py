@@ -1,0 +1,461 @@
+"""Attention: GQA (full / sliding-window / qk-norm / QKV-bias), MLA
+(DeepSeek latent), and cross-attention — all built on one blocked
+online-softmax primitive that never materializes a (T, S) score matrix
+larger than (T, block). This is the dry-run-safe XLA path; the Pallas
+kernels in `repro.kernels` are the TPU fast path with identical semantics.
+
+KV caches are dicts of arrays (pytrees):
+  {"k": (B, C, Hkv, Dk), "v": (B, C, Hkv, Dv), "slot_pos": (B, C) int32}
+`slot_pos` holds the absolute position stored in each slot (-1 = empty).
+Ring caches (sliding window) write at `pos % C`; masking is always done
+against `slot_pos`, so eviction is correctness-preserving as long as
+C >= window + max_segment (we allocate window + 128).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, MLAConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm_headwise
+
+NEG_INF = -1e30
+RING_MARGIN = 128  # extra ring slots beyond the window (max verify segment)
+
+
+# =====================================================================
+# blocked online-softmax attention primitive
+# =====================================================================
+
+def _merge_partials(a, b):
+    """Merge two online-softmax partial states (m, l, acc)."""
+    m_a, l_a, acc_a = a
+    m_b, l_b, acc_b = b
+    m = jnp.maximum(m_a, m_b)
+    ea = jnp.exp(m_a - m)
+    eb = jnp.exp(m_b - m)
+    l = l_a * ea + l_b * eb
+    acc = acc_a * ea[..., None] + acc_b * eb[..., None]
+    return m, l, acc
+
+
+def attend_partial(q, k, v, q_pos, k_pos, *, scale, causal=True, window=0,
+                   extra_mask=None, block=1024):
+    """Blocked attention returning online-softmax partials.
+
+    q: (B, T, Hkv, G, Dk)   (GQA groups folded into q)
+    k: (B, S, Hkv, Dk); v: (B, S, Hkv, Dv)
+    q_pos: (B, T) absolute positions; k_pos: (B, S) slot positions (-1 empty)
+    extra_mask: optional (B, T, S) bool, ANDed in (tree masks).
+    Returns (m, l, acc): (B,T,Hkv,G), (B,T,Hkv,G), (B,T,Hkv,G,Dv).
+    """
+    B, T, Hkv, G, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[-1]
+    qf = q.astype(jnp.float32)
+
+    block = min(block, S)
+    pad = (-S) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        if extra_mask is not None:
+            extra_mask = jnp.pad(extra_mask, ((0, 0), (0, 0), (0, pad)))
+    nb = (S + pad) // block
+
+    # scan over KV blocks: xs leading dim = nb
+    k_b = k.reshape(B, nb, block, Hkv, Dk).swapaxes(0, 1)
+    v_b = v.reshape(B, nb, block, Hkv, Dv).swapaxes(0, 1)
+    kp_b = k_pos.reshape(B, nb, block).swapaxes(0, 1)
+    xs = (k_b, v_b, kp_b)
+    if extra_mask is not None:
+        em_b = extra_mask.reshape(B, T, nb, block).transpose(2, 0, 1, 3)
+        xs = xs + (em_b,)
+
+    m0 = jnp.full((B, T, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, T, Hkv, G), jnp.float32)
+    acc0 = jnp.zeros((B, T, Hkv, G, Dv), jnp.float32)
+
+    def body(carry, x):
+        if extra_mask is not None:
+            kc, vc, kpc, emc = x
+        else:
+            kc, vc, kpc = x
+            emc = None
+        m, l, acc = carry
+        # scores: (B, T, Hkv, G, block)
+        s = jnp.einsum("bthgd,bshd->bthgs", qf, kc.astype(jnp.float32)) * scale
+        valid = kpc[:, None, :] >= 0                                 # (B,1,block)
+        if causal:
+            valid = valid & (kpc[:, None, :] <= q_pos[:, :, None])   # (B,T,block)
+        if window:
+            valid = valid & (q_pos[:, :, None] - kpc[:, None, :] < window)
+        if emc is not None:
+            valid = valid & emc
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        # zero out fully-masked rows (exp(NEG_INF - NEG_INF) = 1 otherwise)
+        p = jnp.where(valid[:, :, None, None, :], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bthgs,bshd->bthgd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), xs)
+    return m, l, acc
+
+
+def attend_partial_parallel(q, k, v, q_pos, k_pos, *, scale, causal=True,
+                            window=0, extra_mask=None, block=1024):
+    """Parallel-partial (flash-decoding style) attention for SMALL T.
+
+    Unlike `attend_partial` (sequential lax.scan carry), every KV block's
+    partial softmax is computed independently and merged with a tree
+    reduction over the block axis. With the KV cache sharded along its
+    capacity dim, GSPMD turns the merge into a psum of tiny (B,T,H,G,Dv)
+    partials instead of all-gathering the cache — the §Perf seq-parallel
+    KV optimization. Numerics identical to attend_partial.
+    """
+    B, T, Hkv, G, Dk = q.shape
+    S = k.shape[1]
+    Dv = v.shape[-1]
+    qf = q.astype(jnp.float32)
+
+    block = min(block, S)
+    pad = (-S) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        if extra_mask is not None:
+            extra_mask = jnp.pad(extra_mask, ((0, 0), (0, 0), (0, pad)))
+    nb = (S + pad) // block
+
+    kb = k.reshape(B, nb, block, Hkv, Dk)
+    vb = v.reshape(B, nb, block, Hkv, Dv)
+    kpb = k_pos.reshape(B, nb, block)
+
+    # scores: (B, nb, T, Hkv, G, block)
+    s = jnp.einsum("bthgd,bnshd->bnthgs", qf, kb.astype(jnp.float32)) * scale
+    valid = (kpb >= 0)[:, :, None, :]
+    if causal:
+        valid = valid & (kpb[:, :, None, :] <= q_pos[:, None, :, None])
+    if window:
+        valid = valid & (q_pos[:, None, :, None] - kpb[:, :, None, :] < window)
+    if extra_mask is not None:
+        em = extra_mask.reshape(B, T, nb, block).transpose(0, 2, 1, 3)
+        valid = valid & em
+    s = jnp.where(valid[:, :, :, None, None, :], s, NEG_INF)
+
+    m_n = s.max(axis=-1)                                  # (B,nb,T,Hkv,G)
+    p = jnp.where(valid[:, :, :, None, None, :],
+                  jnp.exp(s - m_n[..., None]), 0.0)
+    l_n = p.sum(axis=-1)
+    acc_n = jnp.einsum("bnthgs,bnshd->bnthgd", p, vb.astype(jnp.float32))
+
+    m = m_n.max(axis=1)                                   # (B,T,Hkv,G)
+    w = jnp.exp(m_n - m[:, None])
+    l = (l_n * w).sum(axis=1)
+    acc = (acc_n * w[..., None]).sum(axis=1)
+    return m, l, acc
+
+
+def finalize_partial(partial, out_dtype):
+    m, l, acc = partial
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l[..., None]).astype(out_dtype)
+
+
+def blocked_attention(q, k, v, q_pos, k_pos, *, scale, causal=True, window=0,
+                      extra_mask=None, block=1024, segment=None,
+                      parallel=False):
+    """Full attention = history partial (k, v) merged with an optional
+    `segment` = (k_seg, v_seg, pos_seg, mask_seg) for freshly-drafted tokens
+    (tree verification), then normalized. `parallel=True` uses the
+    flash-decoding parallel-partial path (small T only)."""
+    attend = attend_partial_parallel if parallel else attend_partial
+    partial = attend(q, k, v, q_pos, k_pos, scale=scale, causal=causal,
+                     window=window, extra_mask=extra_mask, block=block)
+    if segment is not None:
+        k_s, v_s, pos_s, mask_s = segment
+        p2 = attend_partial(q, k_s, v_s, q_pos, pos_s, scale=scale,
+                            causal=causal, window=window, extra_mask=mask_s,
+                            block=max(k_s.shape[1], 1))
+        partial = _merge_partials(partial, p2)
+    return finalize_partial(partial, q.dtype)
+
+
+# =====================================================================
+# KV cache helpers
+# =====================================================================
+
+def make_kv_cache(batch, capacity, n_kv, dk, dv=None, dtype=jnp.bfloat16,
+                  quantized=False):
+    dv = dv or dk
+    store = jnp.int8 if quantized else dtype
+    c = {
+        "k": jnp.zeros((batch, capacity, n_kv, dk), store),
+        "v": jnp.zeros((batch, capacity, n_kv, dv), store),
+        "slot_pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+    if quantized:
+        c["k_scale"] = jnp.zeros((batch, capacity, n_kv), jnp.float32)
+        c["v_scale"] = jnp.zeros((batch, capacity, n_kv), jnp.float32)
+    return c
+
+
+def _quantize(x):
+    """Symmetric per-(token, head) int8 quantization. x: (B,T,H,D)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_cache(cache):
+    """Materialize bf16 K/V views from an int8 cache (block-local on TPU;
+    whole-array on the XLA reference path)."""
+    if "k_scale" not in cache:
+        return cache["k"], cache["v"]
+    k = cache["k"].astype(jnp.float32) * cache["k_scale"][..., None]
+    v = cache["v"].astype(jnp.float32) * cache["v_scale"][..., None]
+    return k.astype(jnp.bfloat16), v.astype(jnp.bfloat16)
+
+
+def cache_capacity(cfg: ModelConfig, max_len: int, layer_window: int) -> int:
+    if layer_window:
+        return min(max_len, layer_window + RING_MARGIN)
+    return max_len
+
+
+def write_kv(cache, k_new, v_new, positions):
+    """Scatter new KV at slot = position % capacity (ring if capacity < pos)."""
+    B, C = cache["slot_pos"].shape
+    slot = positions % C                                   # (B, T)
+    bidx = jnp.arange(B)[:, None]
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = _quantize(k_new)
+        vq, vs = _quantize(v_new)
+        out["k_scale"] = cache["k_scale"].at[bidx, slot].set(ks)
+        out["v_scale"] = cache["v_scale"].at[bidx, slot].set(vs)
+    else:
+        kq = k_new.astype(cache["k"].dtype)
+        vq = v_new.astype(cache["v"].dtype)
+    out["k"] = cache["k"].at[bidx, slot].set(kq)
+    out["v"] = cache["v"].at[bidx, slot].set(vq)
+    out["slot_pos"] = cache["slot_pos"].at[bidx, slot].set(positions)
+    return out
+
+
+# =====================================================================
+# GQA attention layer
+# =====================================================================
+
+def gqa_params(key, cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd)),
+        "wk": dense_init(ks[1], (d, hkv * hd)),
+        "wv": dense_init(ks[2], (d, hkv * hd)),
+        "wo": dense_init(ks[3], (hq * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p.update(bq=jnp.zeros((hq * hd,)), bk=jnp.zeros((hkv * hd,)),
+                 bv=jnp.zeros((hkv * hd,)))
+    if cfg.qk_norm:
+        p.update(q_norm=jnp.ones((hd,)), k_norm=jnp.ones((hd,)))
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions, rope: bool):
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, cfg.n_heads, hd)
+    k = k.reshape(B, T, cfg.n_kv_heads, hd)
+    v = v.reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm_headwise(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm_headwise(p["k_norm"], k, cfg.norm_eps)
+    if rope and cfg.pos_embed == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
+                  seg_mask=None, window=0, block=1024):
+    """Self-attention for any mode.
+
+    x: (B, T, d); positions: (B, T) absolute positions of these tokens.
+    cache=None        -> self-contained (train/score): attends within x only.
+    cache=dict        -> decode/verify/prefill-with-cache: new KV written to
+                         cache; queries attend to cache + fresh segment.
+    seg_mask: (B, T, T) extra mask among the fresh tokens (tree verification;
+              entry [b,i,j] = may token i attend to token j).
+    Returns (out, cache).
+    """
+    B, T, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = hq // hkv
+    scale = hd ** -0.5
+    q, k, v = _project_qkv(p, cfg, x, positions, rope=True)
+    qg = q.reshape(B, T, hkv, g, hd)
+    par = cfg.decode_attn == "parallel" and cache is not None and T <= 32
+    if cache is not None and cfg.decode_block:
+        block = cfg.decode_block
+
+    if cache is None:
+        out = blocked_attention(qg, k, v, positions, positions, scale=scale,
+                                causal=True, window=window,
+                                extra_mask=seg_mask, block=block)
+        new_cache = None
+    else:
+        new_cache = write_kv(cache, k, v, positions)
+        if seg_mask is not None:
+            # history (old cache, fully causal) + fresh segment under seg_mask
+            ck, cv = dequantize_cache(cache)
+            out = blocked_attention(
+                qg, ck, cv, positions, cache["slot_pos"],
+                scale=scale, causal=True, window=window, block=block,
+                segment=(k, v, positions, seg_mask), parallel=par)
+        else:
+            ck, cv = dequantize_cache(new_cache)
+            out = blocked_attention(
+                qg, ck, cv, positions,
+                new_cache["slot_pos"], scale=scale, causal=True,
+                window=window, block=block, parallel=par)
+    out = out.reshape(B, T, hq * hd)
+    return out @ p["wo"], new_cache
+
+
+def cross_attention(p, cfg: ModelConfig, x, kv_src=None, cache=None, block=1024):
+    """Cross-attention to frontend/encoder states.
+
+    kv_src: (B, S, d) encoder states (prefill: projects and caches K/V).
+    cache:  {"k","v","slot_pos"} of projected cross KV (decode reuses).
+    """
+    B, T, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = hq // hkv
+    q = (x @ p["wq"]).reshape(B, T, hq, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(hq, hd)
+    if kv_src is not None:
+        S = kv_src.shape[1]
+        k = (kv_src @ p["wk"]).reshape(B, S, hkv, hd)
+        v = (kv_src @ p["wv"]).reshape(B, S, hkv, hd)
+        if cfg.qkv_bias:
+            k = k + p["bk"].reshape(hkv, hd)
+            v = v + p["bv"].reshape(hkv, hd)
+        slot_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        cache = {"k": k, "v": v, "slot_pos": slot_pos}
+    k, v, slot_pos = cache["k"], cache["v"], cache["slot_pos"]
+    qg = q.reshape(B, T, hkv, g, hd)
+    qpos = jnp.zeros((B, T), jnp.int32)  # non-causal: positions unused
+    out = blocked_attention(qg, k, v, qpos, slot_pos, scale=hd ** -0.5,
+                            causal=False, window=0, block=block)
+    out = out.reshape(B, T, hq * hd)
+    return out @ p["wo"], cache
+
+
+# =====================================================================
+# MLA (DeepSeek-V3 multi-head latent attention), absorbed formulation
+# =====================================================================
+
+def mla_params(key, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "wdq": dense_init(ks[0], (d, m.q_lora_rank)),
+        "q_norm": jnp.ones((m.q_lora_rank,)),
+        "wuq": dense_init(ks[1], (m.q_lora_rank, H * m.qk_head_dim)),
+        "wdkv": dense_init(ks[2], (d, m.kv_lora_rank)),
+        "kv_norm": jnp.ones((m.kv_lora_rank,)),
+        "wkr": dense_init(ks[3], (d, m.qk_rope_head_dim)),
+        "wuk": dense_init(ks[4], (m.kv_lora_rank, H * m.qk_nope_head_dim)),
+        "wuv": dense_init(ks[5], (m.kv_lora_rank, H * m.v_head_dim)),
+        "wo": dense_init(ks[6], (H * m.v_head_dim, d)),
+    }
+
+
+def make_mla_cache(batch, capacity, cfg: ModelConfig, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "k": jnp.zeros((batch, capacity, 1, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, 1, m.kv_lora_rank), dtype),
+        "slot_pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def _rms(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    return (x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + eps) * scale).astype(dt)
+
+
+def mla_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
+                  seg_mask=None, window=0, block=1024):
+    """Absorbed MLA: the cache holds only (c_kv ++ k_pe) per token; W_UK is
+    absorbed into the query and W_UV applied to the attention output. This
+    is single-latent-head attention (Hkv=1, G=H)."""
+    m: MLAConfig = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    scale = m.qk_head_dim ** -0.5
+
+    cq = _rms(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(B, T, H, m.qk_head_dim)
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    # absorb W_UK: (B,T,H,nope) @ (R,H,nope) -> (B,T,H,R)
+    wuk = p["wuk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bthn,rhn->bthr", q_nope, wuk)
+    q_eff = jnp.concatenate([q_abs, q_pe], axis=-1)        # (B,T,H,R+rope)
+    qg = q_eff.reshape(B, T, 1, H, m.kv_lora_rank + m.qk_rope_head_dim)
+
+    ckv = _rms(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)   # (B,T,R)
+    kpe = apply_rope(x @ p["wkr"], positions, cfg.rope_theta)
+    k_eff = jnp.concatenate([ckv, kpe], axis=-1)[:, :, None, :]  # (B,T,1,R+rope)
+    v_eff = ckv[:, :, None, :]                                   # (B,T,1,R)
+
+    par = cfg.decode_attn == "parallel" and cache is not None and T <= 32
+    if cache is not None and cfg.decode_block:
+        block = cfg.decode_block
+    if cache is None:
+        out_lat = blocked_attention(qg, k_eff, v_eff, positions, positions,
+                                    scale=scale, causal=True, window=window,
+                                    extra_mask=seg_mask, block=block)
+        new_cache = None
+    else:
+        new_cache = write_kv(cache, k_eff, v_eff, positions)
+        if seg_mask is not None:
+            ck, cv = dequantize_cache(cache)
+            out_lat = blocked_attention(
+                qg, ck, cv, positions, cache["slot_pos"],
+                scale=scale, causal=True, window=window, block=block,
+                segment=(k_eff, v_eff, positions, seg_mask), parallel=par)
+        else:
+            ck, cv = dequantize_cache(new_cache)
+            out_lat = blocked_attention(
+                qg, ck, cv, positions,
+                new_cache["slot_pos"], scale=scale, causal=True,
+                window=window, block=block, parallel=par)
+    out_lat = out_lat.reshape(B, T, H, m.kv_lora_rank)
+    wuv = p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bthr,rhv->bthv", out_lat, wuv).reshape(B, T, H * m.v_head_dim)
+    return out @ p["wo"], new_cache

@@ -1,0 +1,92 @@
+"""Common transformer building blocks (pure-JAX pytree params, no flax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------- norms ----------------
+
+def norm_params(cfg: ModelConfig, d: int):
+    if cfg.norm_type == "layer":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.ones((d,))}
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm_type == "layer":
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(dt)
+
+
+def rms_norm_headwise(scale, x, eps=1e-6):
+    """qk-norm: RMS norm over the last (head) dim."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(ms + eps) * scale).astype(dt)
+
+
+# ---------------- rotary embeddings ----------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, D) or (..., T, D); positions: broadcastable to (..., T)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if x.ndim == positions.ndim + 2:                   # head axis present
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------- MLPs ----------------
+
+def mlp_params(key, cfg: ModelConfig, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type == "gelu":
+        return {
+            "wi": dense_init(k1, (d_model, d_ff)),
+            "bi": jnp.zeros((d_ff,)),
+            "wo": dense_init(k2, (d_ff, d_model)),
+            "bo": jnp.zeros((d_model,)),
+        }
+    return {  # swiglu
+        "wg": dense_init(k1, (d_model, d_ff)),
+        "wu": dense_init(k2, (d_model, d_ff)),
+        "wd": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.mlp_type == "gelu":
+        h = jax.nn.gelu(x @ p["wi"] + p["bi"])
+        return h @ p["wo"] + p["bo"]
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]

@@ -1,0 +1,460 @@
+"""Composable model assembly for all assigned architectures.
+
+A model is described by `ModelConfig`; layers are grouped into *stages*
+(maximal repeated patterns of per-layer specs) and each stage is executed
+with `jax.lax.scan` over stacked parameters, so 61-layer models compile as
+small HLO. One `apply()` serves train/score, prefill, decode and
+speculative verification (chain or tree) — mode is determined by
+(cache, seg_mask, write).
+
+Params and caches are plain pytrees (nested dicts/tuples of jnp arrays).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_mlp, apply_norm, embed_init,
+                                 mlp_params, norm_params)
+from repro.models.moe import apply_moe, moe_params
+
+
+# ====================================================== layer plan
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str          # "attn" | "mla" | "ssm"
+    cross: bool         # has a cross-attention sub-block
+    ffn: str            # "dense" | "moe" | "none"
+
+
+def _spec_for(cfg: ModelConfig, idx: int) -> LayerSpec:
+    kind = cfg.layer_kind(idx)
+    if kind == "ssm":
+        mixer = "ssm"
+    elif cfg.attention == "mla":
+        mixer = "mla"
+    else:
+        mixer = "attn"
+    if cfg.family == "ssm":
+        ffn = "none" if cfg.d_ff == 0 else "dense"
+    elif cfg.is_moe_layer(idx):
+        ffn = "moe"
+    else:
+        ffn = "dense"
+    cross = cfg.is_cross_layer(idx) or cfg.is_encdec
+    return LayerSpec(mixer=mixer, cross=cross, ffn=ffn)
+
+
+def _compress(specs: list) -> list:
+    """Greedy max-coverage run-length stage compression.
+
+    Returns [(pattern tuple, repeats), ...] with sum(len(p)*r) == len(specs).
+    """
+    stages = []
+    i = 0
+    n = len(specs)
+    while i < n:
+        best_p, best_k = 1, 1
+        for p in range(1, (n - i) // 2 + 1):
+            k = 1
+            while specs[i + k * p: i + (k + 1) * p] == specs[i: i + p]:
+                k += 1
+            if k > 1 and (p * k > best_p * best_k
+                          or (p * k == best_p * best_k and p < best_p)):
+                best_p, best_k = p, k
+        if best_k == 1:  # no repetition: take the longest non-repeating run
+            best_p = n - i
+        stages.append((tuple(specs[i: i + best_p]), best_k))
+        i += best_p * best_k
+    return stages
+
+
+def layer_plan(cfg: ModelConfig) -> list:
+    return _compress([_spec_for(cfg, i) for i in range(cfg.n_layers)])
+
+
+def effective_window(cfg: ModelConfig) -> int:
+    if cfg.attention == "swa" and cfg.sliding_window:
+        return cfg.sliding_window
+    if cfg.long_context == "swa":
+        return cfg.long_context_window
+    return 0
+
+
+# ====================================================== params
+
+def _init_sublayer(key, spec: LayerSpec, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": norm_params(cfg, cfg.d_model)}
+    if spec.mixer == "attn":
+        p["mixer"] = attn.gqa_params(ks[0], cfg)
+    elif spec.mixer == "mla":
+        p["mixer"] = attn.mla_params(ks[0], cfg)
+    else:
+        p["mixer"] = ssm_mod.ssm_params(ks[0], cfg)
+    if spec.cross:
+        p["ln_cross"] = norm_params(cfg, cfg.d_model)
+        p["cross"] = attn.gqa_params(ks[1], cfg)
+    if spec.ffn != "none":
+        p["ln2"] = norm_params(cfg, cfg.d_model)
+        if spec.ffn == "moe":
+            p["ffn"] = moe_params(ks[2], cfg, cfg.moe)
+        else:
+            p["ffn"] = mlp_params(ks[2], cfg, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _init_stage(key, pattern, repeats, cfg: ModelConfig):
+    def init_one(k):
+        kk = jax.random.split(k, len(pattern))
+        return tuple(_init_sublayer(kk[j], pattern[j], cfg)
+                     for j in range(len(pattern)))
+    return jax.vmap(init_one)(jax.random.split(key, repeats))
+
+
+def _init_encoder(key, cfg: ModelConfig):
+    """Whisper-style bidirectional encoder (frontend embeds in, states out)."""
+    spec = LayerSpec(mixer="attn", cross=False, ffn="dense")
+    k1, k2 = jax.random.split(key)
+    return {
+        "stage": _init_stage(k1, (spec,), cfg.encoder_layers, cfg),
+        "final_norm": norm_params(cfg, cfg.d_model),
+        "pos": embed_init(k2, (max(cfg.encoder_seq, 1), cfg.d_model)),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    plan = layer_plan(cfg)
+    params = {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model)),
+        "stages": [
+            _init_stage(ks[1 + i % 4], pattern, reps, cfg)
+            for i, (pattern, reps) in enumerate(plan)
+        ],
+        "final_norm": norm_params(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = embed_init(ks[5], (cfg.d_model, cfg.padded_vocab))
+    if cfg.pos_embed == "learned":
+        params["pos"] = embed_init(ks[6], (cfg.max_position, cfg.d_model))
+    if cfg.is_encdec:
+        params["encoder"] = _init_encoder(ks[7], cfg)
+    if cfg.mtp:
+        km = jax.random.split(ks[4], 3)
+        spec = LayerSpec(mixer="mla" if cfg.attention == "mla" else "attn",
+                         cross=False, ffn="dense")
+        params["mtp"] = {
+            "proj": embed_init(km[0], (2 * cfg.d_model, cfg.d_model)),
+            "norm_h": norm_params(cfg, cfg.d_model),
+            "norm_e": norm_params(cfg, cfg.d_model),
+            "layer": _init_sublayer(km[1], spec, cfg),
+        }
+    return params
+
+
+# ====================================================== caches
+
+def _sublayer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                    max_len: int, dtype, cross_len: int):
+    window = 0 if spec.mixer == "ssm" else effective_window(cfg)
+    c = {}
+    if spec.mixer == "attn":
+        cap = attn.cache_capacity(cfg, max_len, window)
+        hd = cfg.resolved_head_dim
+        c["self"] = attn.make_kv_cache(batch, cap, cfg.n_kv_heads, hd, hd,
+                                       dtype, quantized=cfg.kv_dtype == "int8")
+    elif spec.mixer == "mla":
+        cap = attn.cache_capacity(cfg, max_len, window)
+        c["self"] = attn.make_mla_cache(batch, cap, cfg, dtype)
+    else:
+        c["self"] = ssm_mod.make_ssm_state(batch, cfg)
+    if spec.cross:
+        hd = cfg.resolved_head_dim
+        c["cross"] = attn.make_kv_cache(batch, max(cross_len, 1),
+                                        cfg.n_kv_heads, hd, hd, dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Decode/prefill cache pytree mirroring the stage structure."""
+    cross_len = cfg.n_frontend_tokens if not cfg.is_encdec else cfg.encoder_seq
+    stages = []
+    for pattern, reps in layer_plan(cfg):
+        per = []
+        for j in range(len(pattern)):
+            c = _sublayer_cache(pattern[j], cfg, batch, max_len, dtype,
+                                cross_len)
+            per.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (reps,) + x.shape).copy(), c))
+        stages.append(tuple(per))
+    return {"stages": stages, "lengths": jnp.zeros((batch,), jnp.int32)}
+
+
+def stack_caches(caches):
+    """Concatenate per-request caches (batch axis 1 inside stages, axis 0
+    for lengths) into one batched cache."""
+    stages = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=1),
+                          *[c["stages"] for c in caches])
+    lengths = jnp.concatenate([c["lengths"] for c in caches], axis=0)
+    return {"stages": stages, "lengths": lengths}
+
+
+def split_cache(cache, n):
+    """Inverse of stack_caches: n per-request caches."""
+    return [{"stages": jax.tree.map(lambda x: x[:, i: i + 1], cache["stages"]),
+             "lengths": cache["lengths"][i: i + 1]} for i in range(n)]
+
+
+# ====================================================== apply
+
+def _apply_sublayer(spec: LayerSpec, p, cache, x, positions, cfg: ModelConfig,
+                    *, seg_mask, write, kv_src, causal=True):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = 0 if spec.mixer == "ssm" else effective_window(cfg)
+    h = apply_norm(p["ln1"], x, cfg)
+    self_cache = cache.get("self") if cache is not None else None
+    if spec.mixer == "attn":
+        if causal:
+            out, new_self = attn.gqa_attention(
+                p["mixer"], cfg, h, positions, cache=self_cache,
+                seg_mask=seg_mask, window=window)
+        else:  # encoder: bidirectional, no rope
+            out, new_self = _bidir_attention(p["mixer"], cfg, h)
+    elif spec.mixer == "mla":
+        out, new_self = attn.mla_attention(
+            p["mixer"], cfg, h, positions, cache=self_cache,
+            seg_mask=seg_mask, window=window)
+    else:  # ssm
+        out, new_self = ssm_mod.ssm_mixer(p["mixer"], cfg, h, state=self_cache)
+    if not write:
+        new_self = self_cache
+    x = (x + out).astype(x.dtype)
+
+    new_cache = dict(cache) if cache is not None else None
+    if new_cache is not None:
+        new_cache["self"] = new_self if new_self is not None else self_cache
+
+    if spec.cross:
+        h = apply_norm(p["ln_cross"], x, cfg)
+        cross_cache = cache.get("cross") if cache is not None else None
+        use_src = kv_src if (cross_cache is None or kv_src is not None) else None
+        out, new_cross = attn.cross_attention(p["cross"], cfg, h,
+                                              kv_src=use_src, cache=cross_cache)
+        x = (x + out).astype(x.dtype)
+        if new_cache is not None:
+            new_cache["cross"] = new_cross
+
+    if spec.ffn != "none":
+        h = apply_norm(p["ln2"], x, cfg)
+        if spec.ffn == "moe":
+            out, aux = apply_moe(p["ffn"], h, cfg, cfg.moe)
+        else:
+            out = apply_mlp(p["ffn"], h, cfg)
+        x = (x + out).astype(x.dtype)
+    return x, new_cache, aux
+
+
+def _bidir_attention(p, cfg: ModelConfig, h):
+    """Encoder self-attention: bidirectional, no rope (learned pos already added)."""
+    B, T, _ = h.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (h @ p["wq"]).reshape(B, T, hq, hd)
+    k = (h @ p["wk"]).reshape(B, T, hkv, hd)
+    v = (h @ p["wv"]).reshape(B, T, hkv, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(hq, hd)
+        k = k + p["bk"].reshape(hkv, hd)
+        v = v + p["bv"].reshape(hkv, hd)
+    qg = q.reshape(B, T, hkv, hq // hkv, hd)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    out = attn.blocked_attention(qg, k, v, pos, pos, scale=hd ** -0.5,
+                                 causal=False)
+    return out.reshape(B, T, hq * hd) @ p["wo"], None
+
+
+def _apply_stage(pattern, sparams, scache, x, positions, cfg: ModelConfig,
+                 *, seg_mask, write, kv_src, causal=True, remat=False):
+    def body(carry, xs):
+        xx = carry
+        lp, lc = xs
+        aux_tot = jnp.zeros((), jnp.float32)
+        new_lc = []
+        for j, spec in enumerate(pattern):
+            cj = lc[j] if lc is not None else None
+            xx, ncj, aux = _apply_sublayer(
+                spec, lp[j], cj, xx, positions, cfg,
+                seg_mask=seg_mask, write=write, kv_src=kv_src, causal=causal)
+            new_lc.append(ncj)
+            aux_tot = aux_tot + aux
+        return xx, (tuple(new_lc), aux_tot)
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (sparams, scache)
+    x, (new_cache, auxs) = jax.lax.scan(body, x, xs)
+    return x, new_cache, auxs.sum()
+
+
+def _encode(params, cfg: ModelConfig, frontend):
+    """Whisper encoder: frontend embeds (B, S, d) -> encoder states."""
+    enc = params["encoder"]
+    S = frontend.shape[1]
+    x = frontend + enc["pos"][:S]
+    spec = LayerSpec(mixer="attn", cross=False, ffn="dense")
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), frontend.shape[:2])
+    x, _, _ = _apply_stage((spec,), enc["stage"], None, x, pos, cfg,
+                           seg_mask=None, write=False, kv_src=None,
+                           causal=False)
+    return apply_norm(enc["final_norm"], x, cfg)
+
+
+def _logits(params, cfg: ModelConfig, x):
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:
+        neg = jnp.full((cfg.padded_vocab - cfg.vocab,), -1e30, jnp.float32)
+        logits = logits.at[..., cfg.vocab:].set(neg)
+    return logits
+
+
+def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
+          frontend=None, seg_mask=None, write=True, remat=False,
+          return_hidden=False):
+    """Unified forward.
+
+    tokens:    (B, T) int32
+    positions: (B, T) absolute positions (default arange)
+    cache:     None (self-contained) or pytree from init_cache
+    frontend:  (B, S, d) stub modality embeddings (audio/vlm)
+    seg_mask:  (B, T, T) intra-segment mask (tree verification)
+    write:     commit new KV/state into the returned cache
+    Returns (logits (B,T,Vp) f32, new_cache, aux_loss) [+ hidden if asked].
+    """
+    B, T = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dtype)
+    if cfg.pos_embed == "learned":
+        x = x + params["pos"][positions].astype(dtype)
+
+    kv_src = None
+    if cfg.is_encdec:
+        if frontend is not None:
+            kv_src = _encode(params, cfg, frontend.astype(dtype))
+    elif cfg.cross_attn_period:
+        kv_src = frontend.astype(dtype) if frontend is not None else None
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_stages = []
+    plan = layer_plan(cfg)
+    cache_stages = cache["stages"] if cache is not None else [None] * len(plan)
+    for (pattern, reps), sparams, scache in zip(plan, params["stages"],
+                                                cache_stages):
+        x, ncache, aux = _apply_stage(
+            pattern, sparams, scache, x, positions, cfg,
+            seg_mask=seg_mask, write=write, kv_src=kv_src, remat=remat)
+        new_stages.append(ncache)
+        aux_total = aux_total + aux
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _logits(params, cfg, x)
+
+    new_cache = None
+    if cache is not None:
+        new_len = cache["lengths"]
+        if write:
+            new_len = jnp.maximum(new_len, positions[:, -1] + 1)
+        new_cache = {"stages": new_stages, "lengths": new_len}
+    if return_hidden:
+        return logits, new_cache, aux_total, x
+    return logits, new_cache, aux_total
+
+
+# ====================================================== losses
+
+def lm_loss(params, cfg: ModelConfig, tokens, frontend=None, remat=True):
+    """Next-token CE (+ MoE aux + MTP aux when configured)."""
+    logits, _, aux, hidden = apply(params, cfg, tokens, frontend=frontend,
+                                   remat=remat, return_hidden=True)
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    total = loss + 0.001 * aux
+
+    if cfg.mtp:
+        total = total + 0.3 * _mtp_loss(params, cfg, tokens, hidden)
+    return total, {"lm": loss, "aux": aux}
+
+
+def _mtp_loss(params, cfg: ModelConfig, tokens, hidden):
+    """DeepSeek-V3 depth-1 multi-token prediction: predict t+2 from
+    (h_t, emb(x_{t+1})) through one extra transformer layer."""
+    mtp = params["mtp"]
+    dtype = hidden.dtype
+    B, T = tokens.shape
+    h = apply_norm(mtp["norm_h"], hidden[:, : T - 1], cfg)
+    e = apply_norm(mtp["norm_e"],
+                   params["embed"][tokens[:, 1:]].astype(dtype), cfg)
+    x = jnp.concatenate([h, e], axis=-1) @ mtp["proj"].astype(dtype)
+    spec = LayerSpec(mixer="mla" if cfg.attention == "mla" else "attn",
+                     cross=False, ffn="dense")
+    pos = jnp.broadcast_to(jnp.arange(T - 1, dtype=jnp.int32), (B, T - 1))
+    x, _, _ = _apply_sublayer(spec, mtp["layer"], None, x, pos, cfg,
+                              seg_mask=None, write=False, kv_src=None)
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = _logits(params, cfg, x)
+    tgt = tokens[:, 2:]
+    lp = jax.nn.log_softmax(logits[:, : T - 2], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+# ====================================================== convenience wrappers
+
+def prefill(params, cfg: ModelConfig, tokens, cache, frontend=None):
+    positions = jnp.broadcast_to(
+        jnp.arange(tokens.shape[1], dtype=jnp.int32), tokens.shape)
+    return apply(params, cfg, tokens, positions, cache=cache,
+                 frontend=frontend, write=True)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, frontend=None):
+    """tokens: (B, 1) next tokens at positions cache['lengths']."""
+    positions = cache["lengths"][:, None]
+    return apply(params, cfg, tokens, positions, cache=cache,
+                 frontend=frontend, write=True)
+
+
+def verify_chunk(params, cfg: ModelConfig, tokens, cache, positions=None,
+                 seg_mask=None, write=False):
+    """Score a draft segment (chain or tree) against the cache without
+    committing. tokens: (B, G); positions default chain continuation."""
+    B, G = tokens.shape
+    if positions is None:
+        positions = cache["lengths"][:, None] + jnp.arange(G, dtype=jnp.int32)
+    if seg_mask is None:
+        seg_mask = jnp.broadcast_to(
+            jnp.tril(jnp.ones((G, G), bool)), (B, G, G))
+    return apply(params, cfg, tokens, positions, cache=cache,
+                 seg_mask=seg_mask, write=write)
+
+
+def extend(params, cfg: ModelConfig, tokens, cache, frontend=None):
+    """Commit accepted tokens (chain) into the cache; returns logits too."""
+    B, G = tokens.shape
+    positions = cache["lengths"][:, None] + jnp.arange(G, dtype=jnp.int32)
+    return apply(params, cfg, tokens, positions, cache=cache,
+                 frontend=frontend, write=True)

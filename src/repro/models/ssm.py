@@ -1,0 +1,221 @@
+"""Mamba2 SSD (state-space duality) mixer.
+
+Full-sequence path uses the chunked SSD algorithm (intra-chunk dual
+"attention" form + inter-chunk state recurrence via lax.scan); decode path
+is the O(1) recurrent state update. `ssd_reference` (naive recurrence over
+time) is the oracle for tests, and `repro.kernels.ssd_scan` is the Pallas
+TPU kernel for the intra-chunk compute.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------- params
+
+def ssm_params(key, cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    D = cfg.d_model
+    din = s.d_inner(D)
+    H = s.n_heads(D)
+    G, N = s.n_groups, s.d_state
+    conv_dim = din + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * din + 2 * G * N + H)),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), scale=0.2),
+        "conv_b": jnp.zeros((conv_dim,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D_skip": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))),  # softplus^-1(0.01)
+        "norm_scale": jnp.ones((din,)),
+        "out_proj": dense_init(ks[2], (din, D)),
+    }
+
+
+def make_ssm_state(batch, cfg: ModelConfig, dtype=jnp.float32):
+    s = cfg.ssm
+    D = cfg.d_model
+    H, P, N = s.n_heads(D), s.head_dim, s.d_state
+    conv_dim = s.d_inner(D) + 2 * s.n_groups * N
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), dtype),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+# ------------------------------------------------------------- SSD core
+
+def ssd_chunked(x, dt, A, B, C, chunk, initial_state=None):
+    """Chunked SSD scan.
+
+    x:  (b, L, H, P) inputs (already dt-weighted? no: raw)
+    dt: (b, L, H)    positive step sizes
+    A:  (H,)         negative decay rates
+    B:  (b, L, G, N) input projections
+    C:  (b, L, G, N) output projections
+    Returns (y (b, L, H, P), final_state (b, H, P, N)).
+    """
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    chunk = min(chunk, L)          # decode (L=1) degenerates to the recurrence
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nc = Lp // chunk
+    rep = H // G  # heads per group
+
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, G, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, G, N).astype(jnp.float32)
+    # broadcast groups to heads
+    Bh = jnp.repeat(Bc, rep, axis=3)           # (b,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A                                # (b,nc,Q,H) negative
+    dA_cum = jnp.cumsum(dA, axis=2)             # within-chunk cumulative decay
+
+    # ---- intra-chunk (dual attention form) ----
+    # L_mat[i,j] = exp(dA_cum[i] - dA_cum[j]) for i >= j else 0
+    seg = dA_cum[:, :, :, None, :] - dA_cum[:, :, None, :, :]   # (b,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh) * Lmat    # (b,nc,Q,Q,H)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]               # (b,nc,Q,H,P)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xdt)
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)       # (b,nc,Q,H)
+    state_c = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, decay_to_end * dtc, xc.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence ----
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                  # (b,nc,H)
+    s0 = (jnp.zeros((b, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def body(s_prev, inp):
+        dec, sc = inp                                           # (b,H), (b,H,P,N)
+        s_new = s_prev * dec[:, :, None, None] + sc
+        return s_new, s_prev
+
+    xs = (chunk_decay.swapaxes(0, 1), state_c.swapaxes(0, 1))
+    s_final, s_before = jax.lax.scan(body, s0, xs)
+    s_before = s_before.swapaxes(0, 1)                          # (b,nc,H,P,N)
+
+    # ---- inter-chunk contribution ----
+    in_decay = jnp.exp(dA_cum)                                  # (b,nc,Q,H)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, s_before, in_decay)
+
+    y = (y_intra + y_inter).reshape(b, Lp, H, P)[:, :L]
+    return y.astype(x.dtype), s_final
+
+
+def ssd_reference(x, dt, A, B, C, initial_state=None):
+    """Naive O(L) recurrence oracle: h_t = exp(dt A) h + dt B x; y = C h."""
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    s = (jnp.zeros((b, H, P, N), jnp.float32) if initial_state is None
+         else initial_state.astype(jnp.float32))
+
+    def body(s, inp):
+        xt, dtt, Bt, Ct = inp                 # (b,H,P),(b,H),(b,H,N),(b,H,N)
+        dec = jnp.exp(dtt * A)                # (b,H)
+        s = s * dec[:, :, None, None] + jnp.einsum(
+            "bhn,bh,bhp->bhpn", Bt, dtt, xt.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, s)
+        return s, y
+
+    xs = (x.swapaxes(0, 1), dt.astype(jnp.float32).swapaxes(0, 1),
+          Bh.swapaxes(0, 1), Ch.swapaxes(0, 1))
+    s, ys = jax.lax.scan(body, s, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), s
+
+
+# ------------------------------------------------------------ mixer apply
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv along time. xbc: (B, L, C), w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i] for i in range(K))
+    return out + bias
+
+
+def _split_in_proj(z_xbc_dt, cfg: ModelConfig):
+    s = cfg.ssm
+    D = cfg.d_model
+    din = s.d_inner(D)
+    GN = s.n_groups * s.d_state
+    H = s.n_heads(D)
+    z = z_xbc_dt[..., :din]
+    xbc = z_xbc_dt[..., din: 2 * din + 2 * GN]
+    dt = z_xbc_dt[..., 2 * din + 2 * GN:]
+    assert dt.shape[-1] == H
+    return z, xbc, dt
+
+
+def _gated_rmsnorm(y, z, scale, eps):
+    dt_ = y.dtype
+    y = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(y * y, axis=-1, keepdims=True)
+    return (y * jax.lax.rsqrt(ms + eps) * scale).astype(dt_)
+
+
+def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False):
+    """Full-sequence (state=None or carried) SSD mixer.
+
+    x: (B, L, d_model). Returns (out, new_state or None).
+    """
+    s = cfg.ssm
+    D = cfg.d_model
+    din, H, P = s.d_inner(D), s.n_heads(D), s.head_dim
+    G, N = s.n_groups, s.d_state
+    B_, L, _ = x.shape
+
+    z, xbc, dt = _split_in_proj(x @ p["in_proj"], cfg)
+    if state is not None:
+        # prepend conv history
+        hist = state["conv"].astype(xbc.dtype)
+        xbc_ext = jnp.concatenate([hist, xbc], axis=1)
+        conv_out = _causal_conv(xbc_ext, p["conv_w"], p["conv_b"])[:, hist.shape[1]:]
+        new_conv = xbc_ext[:, -(s.d_conv - 1):, :] if s.d_conv > 1 else hist
+    else:
+        conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        new_conv = None
+    xbc = jax.nn.silu(conv_out)
+
+    xs = xbc[..., :din].reshape(B_, L, H, P)
+    Bmat = xbc[..., din: din + G * N].reshape(B_, L, G, N)
+    Cmat = xbc[..., din + G * N:].reshape(B_, L, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    init = state["ssm"] if state is not None else None
+    if use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, s_final = ssd_ops.ssd(xs, dt, A, Bmat, Cmat, s.chunk_size, init)
+    else:
+        y, s_final = ssd_chunked(xs, dt, A, Bmat, Cmat, s.chunk_size, init)
+    y = y + p["D_skip"][:, None] * xs
+    y = y.reshape(B_, L, din)
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    new_state = None
+    if state is not None:
+        new_state = {"ssm": s_final, "conv": new_conv.astype(state["conv"].dtype),
+                     "pos": state["pos"] + L}
+    return out, new_state

@@ -1,0 +1,122 @@
+"""Optimizers (pure JAX, pytree-based): AdamW, SGD+momentum, Adafactor.
+
+Adafactor exists so 50B+ parameter train dry-runs fit v5e HBM (optimizer
+state is O(sum of matrix dims) instead of 2x params).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params) if momentum else None
+
+    def update(grads, state, params=None):
+        if momentum:
+            state = jax.tree.map(lambda m, g: momentum * m + g, state, grads)
+            upd = jax.tree.map(lambda m: -lr * m, state)
+        else:
+            upd = jax.tree.map(lambda g: -lr * g, grads)
+        return upd, state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"m": zeros(), "v": zeros(), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(
+            g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def u(m, v, p):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return -lr * (step + weight_decay * p.astype(jnp.float32))
+
+        upd = jax.tree.map(u, m, v, params)
+        return upd, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-2, eps: float = 1e-30,
+              decay: float = 0.8, clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern)."""
+    def is_factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+    def init(params):
+        def one(p):
+            if is_factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"s": jax.tree.map(one, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def _state_leaf(x):
+        return isinstance(x, dict) and ("v" in x or "vr" in x)
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** -decay
+
+        def one(s, g):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1)[..., None, None], eps))
+                upd = g * jax.lax.rsqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            return {"__u": -lr * upd, "__s": ns}
+
+        pairs = jax.tree.map(one, state["s"], grads, is_leaf=_state_leaf)
+        is_pair = lambda x: isinstance(x, dict) and "__u" in x
+        upd = jax.tree.map(lambda pr: pr["__u"], pairs, is_leaf=is_pair)
+        news = jax.tree.map(lambda pr: pr["__s"], pairs, is_leaf=is_pair)
+        return upd, {"s": news, "t": t}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, lr: float) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr)
+    if name == "sgd":
+        return sgd(lr)
+    if name == "adafactor":
+        return adafactor(lr)
+    raise KeyError(name)

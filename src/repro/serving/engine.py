@@ -1,0 +1,347 @@
+"""The CoSine serving engine (paper §4) and its baselines.
+
+Strategies (DESIGN.md §1):
+  ar         — vLLM-style incremental decoding (no speculation)
+  vanilla    — single-drafter chain speculation, coupled execution
+  specinfer  — all drafters draft independent chains, merged into a token
+               tree, coupled (synchronous) execution
+  pipeinfer  — single-drafter chain, decoupled pipelined execution
+  cosine     — the paper: adaptive routing (Eq. 1-3) + confidence-based
+               token fusion (Eq. 4) + tree verification + collaborative
+               pipeline (Eq. 5-8, Alg. 2)
+
+Token-level computation (drafting, verification, acceptance) is executed
+for real by the JAX models; wall-clock of the paper's heterogeneous
+GPU deployment is accounted by the calibrated LatencyModel (DESIGN.md §3),
+so latency/throughput/cost metrics are reported in *simulated* deployment
+time while correctness (losslessness) is real.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CoSineConfig, ModelConfig
+from repro.core import tree as tree_mod
+from repro.core.latency_model import LatencyModel
+from repro.core.request_pool import Request, RequestPool
+from repro.core.routing import AdaptiveRouter
+from repro.core.scheduler import RequestScheduler, adaptive_speculation
+from repro.core.speculative import verify_greedy
+from repro.serving.runner import ModelRunner
+
+STRATEGIES = ("ar", "vanilla", "specinfer", "pipeinfer", "cosine")
+
+
+@dataclass
+class IterationRecord:
+    t_start_ms: float
+    t_iter_ms: float
+    batch: int
+    big_gamma: int
+    committed: int
+    n_active_drafters: int
+
+
+@dataclass
+class ServeStats:
+    records: List[IterationRecord] = field(default_factory=list)
+    total_committed: int = 0
+    total_drafted: int = 0
+
+    @property
+    def sim_ms(self) -> float:
+        return (self.records[-1].t_start_ms + self.records[-1].t_iter_ms
+                if self.records else 0.0)
+
+    @property
+    def throughput_tps(self) -> float:
+        return self.total_committed / max(self.sim_ms / 1000.0, 1e-9)
+
+    @property
+    def mean_acceptance(self) -> float:
+        return self.total_committed / max(len(self.records), 1)
+
+
+class SpeculativeEngine:
+    def __init__(self, target: Tuple[ModelConfig, dict],
+                 drafters: Sequence[Tuple[ModelConfig, dict, str]],
+                 cosine: CoSineConfig, strategy: str = "cosine",
+                 latency: Optional[LatencyModel] = None,
+                 max_len: int = 512, seed: int = 0,
+                 eos_token: Optional[int] = None):
+        assert strategy in STRATEGIES, strategy
+        self.strategy = strategy
+        self.cfg = cosine
+        self.eos = eos_token
+        self.target_cfg, target_params = target
+        self.target = ModelRunner(self.target_cfg, target_params, max_len)
+        self.drafters = [ModelRunner(c, p, max_len) for c, p, _ in drafters]
+        self.drafter_domains = [d for _, _, d in drafters]
+        self.lat = latency or LatencyModel()
+        self.pool = RequestPool()
+        self.router = AdaptiveRouter(len(self.drafters), cosine,
+                                     self.target.embed_np, seed)
+        self.sched = RequestScheduler(cosine, self.lat)
+        self.stats = ServeStats()
+        self.clock_ms = 0.0
+        self.entry_logits: Dict[int, np.ndarray] = {}
+        self.rng = np.random.default_rng(seed)
+        # SSM/hybrid verifiers cannot apply tree masks -> chain-only trees
+        self.tree_capable = self.target_cfg.family not in ("ssm", "hybrid")
+
+    # ------------------------------------------------------------ requests
+    def submit(self, prompt, max_new_tokens: int = 32, domain=None,
+               arrival_ms: float = 0.0) -> Request:
+        r = self.pool.add(prompt, max_new_tokens, domain, arrival_ms)
+        r.gamma = self.cfg.draft_len
+        return r
+
+    def _ensure_prefilled(self, r: Request):
+        if r.rid in self.entry_logits:
+            return
+        ctx = list(r.prompt) + r.generated
+        self.entry_logits[r.rid], _ = self.target.prefill_request(r.rid, ctx)
+        if self.strategy != "ar":
+            lls = []
+            for d in self.drafters:
+                _, ll = d.prefill_request(r.rid, ctx)
+                lls.append(ll)
+            if self.strategy == "cosine" and self.cfg.enable_routing:
+                # content-based routing prior (paper §5 request analysis)
+                self.router.set_prior(r.rid, lls)
+
+    # ------------------------------------------------------------ drafting
+    def _participants(self, r: Request) -> List[int]:
+        n = len(self.drafters)
+        if self.strategy == "cosine":
+            if not self.cfg.enable_routing:   # ablation: random assignment
+                k = min(self.cfg.drafters_per_request, n)
+                return sorted(self.rng.choice(n, size=k, replace=False).tolist())
+            return self.router.route(r.rid, r.l_acc_ema)
+        if self.strategy == "specinfer":
+            return list(range(n))
+        return [0]
+
+    def _draft(self, batch: List[Request], gammas: List[int]):
+        """Run the speculation cluster for one iteration.
+
+        Returns per-request dicts: draft tree, plus (tokens, confs) per
+        drafter for routing updates."""
+        B = len(batch)
+        K = max(gammas)
+        rids = [r.rid for r in batch]
+        parts = [self._participants(r) for r in batch]
+        fuse = self.strategy == "cosine" and self.cfg.enable_fusion
+
+        from repro.models.model import stack_caches
+        temp = [stack_caches([d.caches[r] for r in rids])
+                for d in self.drafters]
+
+        prev = np.array([ (r.generated[-1] if r.generated else r.prompt[-1])
+                          for r in batch], np.int32)
+        prev_per_d = [prev.copy() for _ in self.drafters]
+
+        all_tokens = np.zeros((len(self.drafters), B, K), np.int32)
+        all_confs = np.zeros((len(self.drafters), B, K), np.float32)
+        chain_tokens = np.zeros((B, K), np.int32)
+        chain_probs = np.zeros((B, K), np.float32)
+
+        for i in range(K):
+            step_tokens = np.zeros((len(self.drafters), B), np.int32)
+            step_confs = np.full((len(self.drafters), B), -1.0, np.float32)
+            for di, d in enumerate(self.drafters):
+                lg, temp[di] = d.decode(rids, prev_per_d[di], caches=temp[di])
+                probs = jax.nn.softmax(jnp.asarray(lg), -1)
+                tok = np.asarray(jnp.argmax(probs, -1))
+                conf = np.asarray(jnp.take_along_axis(
+                    probs, jnp.asarray(tok)[:, None], -1))[:, 0]
+                step_tokens[di] = tok
+                step_confs[di] = conf
+            all_tokens[:, :, i] = step_tokens
+            all_confs[:, :, i] = np.maximum(step_confs, 0.0)
+
+            # confidence-based token fusion (Eq. 4)
+            fused = np.zeros(B, np.int32)
+            fused_p = np.zeros(B, np.float32)
+            for b in range(B):
+                cand = parts[b]
+                masked = np.full(len(self.drafters), -1.0)
+                masked[cand] = step_confs[cand, b]
+                best = int(np.argmax(masked))
+                fused[b] = step_tokens[best, b]
+                fused_p[b] = max(masked[best], 0.0)
+            chain_tokens[:, i] = fused
+            chain_probs[:, i] = fused_p
+
+            if fuse:
+                for di in range(len(self.drafters)):
+                    prev_per_d[di] = fused.copy()
+            elif self.strategy in ("specinfer", "cosine"):
+                # independent chains (SpecInfer; CoSine w/o fusion ablation)
+                for di in range(len(self.drafters)):
+                    prev_per_d[di] = step_tokens[di].copy()
+            else:  # single-drafter chain
+                for di in range(len(self.drafters)):
+                    prev_per_d[di] = step_tokens[0].copy()
+
+        # ---- build trees ----
+        trees = []
+        for b, r in enumerate(batch):
+            g = gammas[b]
+            if self.strategy == "cosine" and self.tree_capable \
+                    and self.cfg.tree_width > 0:
+                side_t = all_tokens[:, b, :g].T            # (g, N)
+                side_p = np.where(
+                    np.isin(np.arange(len(self.drafters)), parts[b]),
+                    all_confs[:, b, :g].T, -1.0)
+                side_d = np.broadcast_to(np.arange(len(self.drafters)),
+                                         (g, len(self.drafters)))
+                t = tree_mod.build_tree(chain_tokens[b, :g], chain_probs[b, :g],
+                                        side_t, side_p, side_d,
+                                        self.cfg.tree_width)
+            elif self.strategy == "specinfer" and self.tree_capable:
+                t = tree_mod.build_tree(
+                    chain_tokens[b, :g], chain_probs[b, :g],
+                    all_tokens[:, b, :g].T, all_confs[:, b, :g].T,
+                    np.broadcast_to(np.arange(len(self.drafters)),
+                                    (g, len(self.drafters))),
+                    tree_width=max(len(self.drafters) - 1, 1))
+            else:
+                t = tree_mod.chain_tree(chain_tokens[b, :g], chain_probs[b, :g])
+            trees.append(t)
+        return trees, all_tokens, all_confs, parts
+
+    # ------------------------------------------------------------ one step
+    def step(self) -> Optional[IterationRecord]:
+        pending = self.pool.pending(self.clock_ms)
+        if not pending:
+            future = [r.arrival_ms for r in self.pool.pending(float("inf"))]
+            if not future:
+                return None
+            self.clock_ms = min(future)   # idle until next arrival
+            pending = self.pool.pending(self.clock_ms)
+
+        for r in pending:
+            self._ensure_prefilled(r)
+
+        if self.strategy == "ar":
+            return self._step_ar(pending)
+
+        pipelined = self.strategy in ("pipeinfer", "cosine")
+        use_sched = self.strategy == "cosine"
+        if use_sched:
+            plan = self.sched.plan(pending, pipelined=pipelined,
+                                   n_drafters=self.cfg.drafters_per_request)
+            batch, gammas = plan.requests, plan.gammas
+        else:
+            batch = sorted(pending, key=lambda r: r.arrival_ms)[: self.cfg.max_batch]
+            gammas = [self.cfg.draft_len] * len(batch)
+
+        trees, all_tokens, all_confs, parts = self._draft(batch, gammas)
+
+        # ---- batched tree verification ----
+        M_nodes = max(t.n_nodes for t in trees)
+        padded = tree_mod.pad_trees(trees, M_nodes)
+        rids = [r.rid for r in batch]
+        node_logits = self.target.verify(rids, padded["tokens"],
+                                         padded["rel_pos"], padded["mask"])
+
+        committed: Dict[int, List[int]] = {}
+        total_committed = 0
+        for b, r in enumerate(batch):
+            t = trees[b]
+            node_argmax = np.argmax(node_logits[b, : t.n_nodes], -1)
+            entry_argmax = int(np.argmax(self.entry_logits[r.rid]))
+            acc_tokens, acc_nodes, correction = tree_mod.accept_tree_greedy(
+                t, node_argmax, entry_argmax)
+            toks = acc_tokens + [int(correction)]
+            remaining = r.max_new_tokens - len(r.generated)
+            toks = toks[: max(remaining, 1)]
+            if self.eos is not None and self.eos in toks:
+                toks = toks[: toks.index(self.eos) + 1]
+            committed[r.rid] = toks
+            total_committed += len(toks)
+            r.record_acceptance(len(toks), gammas[b])
+            # routing update (Eq. 1-2) from this iteration's evidence
+            if self.strategy == "cosine":
+                self.router.update(r.rid, all_tokens[:, b, :], all_confs[:, b, :],
+                                   toks, parts[b])
+
+        # ---- commit to target + drafters ----
+        tails = self.target.extend_committed(committed)
+        for rid, lg in tails.items():
+            self.entry_logits[rid] = lg
+        for d in self.drafters:
+            d.extend_committed(committed)
+
+        # ---- bookkeeping / simulated time ----
+        b = len(batch)
+        l = max(r.context_len for r in batch)
+        gmax = max(gammas)
+        big_gamma = sum(t.n_nodes for t in trees)
+        n_active = (sum(len(p) for p in parts) / b if self.strategy == "cosine"
+                    else (len(self.drafters) if self.strategy == "specinfer" else 1))
+        if pipelined:
+            t_iter = self.lat.iteration_pipelined(b, l, gmax, big_gamma,
+                                                  max(int(np.ceil(n_active)), 1))
+        else:
+            t_iter = self.lat.iteration_coupled(b, l, gmax, big_gamma,
+                                                max(int(np.ceil(n_active)), 1))
+        rec = IterationRecord(self.clock_ms, t_iter, b, big_gamma,
+                              total_committed, int(np.ceil(n_active)))
+        self._finalize(batch, committed, rec)
+        if self.strategy == "cosine":
+            busy = self.lat.t_llm(b, l, big_gamma) / max(t_iter, 1e-9)
+            for r, g in zip(batch, gammas):
+                if not r.done:
+                    self.sched.update_gamma_feedback(
+                        r, len(committed[r.rid]), busy)
+        return rec
+
+    def _step_ar(self, pending: List[Request]) -> IterationRecord:
+        batch = sorted(pending, key=lambda r: r.arrival_ms)[: self.cfg.max_batch]
+        committed: Dict[int, List[int]] = {}
+        for r in batch:
+            tok = int(np.argmax(self.entry_logits[r.rid]))
+            committed[r.rid] = [tok]
+        tails = self.target.extend_committed(committed)
+        for rid, lg in tails.items():
+            self.entry_logits[rid] = lg
+        b = len(batch)
+        l = max(r.context_len for r in batch)
+        t_iter = self.lat.t_llm(b, l, b)
+        rec = IterationRecord(self.clock_ms, t_iter, b, b, b, 0)
+        for r in batch:
+            r.record_acceptance(1, 0)
+        self._finalize(batch, committed, rec)
+        return rec
+
+    def _finalize(self, batch, committed, rec: IterationRecord):
+        self.clock_ms += rec.t_iter_ms
+        self.stats.records.append(rec)
+        self.stats.total_committed += rec.committed
+        self.stats.total_drafted += rec.big_gamma
+        for r in batch:
+            toks = committed[r.rid]
+            if r.first_token_ms < 0 and toks:
+                r.first_token_ms = self.clock_ms
+            r.generated.extend(toks)
+            hit_eos = self.eos is not None and self.eos in toks
+            if len(r.generated) >= r.max_new_tokens or hit_eos:
+                self.pool.finish(r.rid, self.clock_ms)
+                self.target.drop(r.rid)
+                for d in self.drafters:
+                    d.drop(r.rid)
+                self.entry_logits.pop(r.rid, None)
+                self.router.drop(r.rid)
+
+    def run(self, max_iterations: int = 10_000) -> ServeStats:
+        for _ in range(max_iterations):
+            if self.step() is None:
+                break
+        return self.stats

@@ -1,0 +1,149 @@
+"""ModelRunner: executes one model (target LLM or drafter SSM) over
+per-request KV caches with jit-compiled, shape-bucketed step functions.
+
+Caches are per-request (batch dim 1) pytrees from `model.init_cache`;
+batched calls stack them along axis 0, run one jitted program, and split
+back — functional continuous batching. Rollback is snapshot-based: the
+engine simply keeps the pre-draft cache object and discards speculative
+ones (correct for both attention KV and SSM recurrent state).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import model as M
+
+PREFILL_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024)
+
+
+_stack = M.stack_caches
+_split = M.split_cache
+
+# Module-level jitted steps with cfg static: every ModelRunner with the
+# same (hashable, frozen) ModelConfig shares one compile cache — engines
+# are created freely in benchmarks without re-tracing.
+_g_prefill = jax.jit(M.prefill, static_argnames=("cfg",))
+_g_decode = jax.jit(M.decode_step, static_argnames=("cfg",))
+_g_verify = jax.jit(M.verify_chunk, static_argnames=("cfg", "write"))
+_g_extend = jax.jit(M.extend, static_argnames=("cfg",))
+
+
+class ModelRunner:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.caches: Dict[int, dict] = {}
+        self.embed_np = np.asarray(params["embed"][: cfg.vocab], np.float32)
+
+        self._jit_prefill = partial(_g_prefill, cfg=cfg)
+        self._jit_decode = partial(_g_decode, cfg=cfg)
+        self._jit_verify = partial(_g_verify, cfg=cfg)
+        self._jit_extend = partial(_g_extend, cfg=cfg)
+
+    # ----------------------------------------------------------- lifecycle
+    def new_cache(self):
+        return M.init_cache(self.cfg, 1, self.max_len, dtype=self.cache_dtype)
+
+    def prefill_request(self, rid: int, tokens: np.ndarray):
+        """Prefill a request's context; returns (last-position logits (V,),
+        mean next-token logprob of the context under this model).
+
+        The logprob is the engine's content-based routing prior (paper §5:
+        requests are analyzed and matched to suitable drafters before
+        inference). Runs in shape buckets (exact coverage — no padded
+        garbage reaches SSM states)."""
+        cache = self.new_cache()
+        toks = np.asarray(tokens, np.int32)
+        logits = None
+        ll_sum, ll_n = 0.0, 0
+        i = 0
+        while i < len(toks):
+            remaining = len(toks) - i
+            chunk = 1
+            for b in PREFILL_BUCKETS:
+                if b <= remaining:
+                    chunk = b
+            seg = jnp.asarray(toks[i: i + chunk])[None, :]
+            if chunk == 1 and i > 0:
+                logits, cache, _ = self._jit_decode(self.params, tokens=seg,
+                                                    cache=cache)
+            else:
+                logits, cache, _ = self._jit_extend(self.params, tokens=seg,
+                                                    cache=cache)
+            # likelihood of the *next* tokens within this chunk
+            nxt = toks[i + 1: i + chunk]
+            if len(nxt):
+                lp = jax.nn.log_softmax(
+                    logits[0, : len(nxt), : self.cfg.vocab], -1)
+                ll_sum += float(jnp.take_along_axis(
+                    lp, jnp.asarray(nxt)[:, None], -1).sum())
+                ll_n += len(nxt)
+            i += chunk
+        self.caches[rid] = cache
+        mean_ll = ll_sum / max(ll_n, 1)
+        return np.asarray(logits[0, -1, : self.cfg.vocab]), mean_ll
+
+    def drop(self, rid: int):
+        self.caches.pop(rid, None)
+
+    # ----------------------------------------------------------- batched ops
+    def decode(self, rids: Sequence[int], tokens: np.ndarray,
+               caches: Optional[dict] = None):
+        """One decode step. tokens: (B,). Returns logits (B, V) and updates
+        (or returns, if `caches` passed) the stacked cache."""
+        stacked = caches if caches is not None else _stack(
+            [self.caches[r] for r in rids])
+        lg, new_cache, _ = self._jit_decode(
+            self.params, tokens=jnp.asarray(tokens, jnp.int32)[:, None],
+            cache=stacked)
+        if caches is None:
+            for r, c in zip(rids, _split(new_cache, len(rids))):
+                self.caches[r] = c
+            new_cache = None
+        return np.asarray(lg[:, 0, : self.cfg.vocab]), new_cache
+
+    def verify(self, rids: Sequence[int], tokens: np.ndarray,
+               rel_pos: np.ndarray, seg_mask: np.ndarray) -> np.ndarray:
+        """Tree/chain verification (no cache commit).
+
+        tokens: (B, Gmax); rel_pos: (B, Gmax) node depths; seg_mask
+        (B, Gmax, Gmax) ancestor mask. Returns logits (B, Gmax, V)."""
+        stacked = _stack([self.caches[r] for r in rids])
+        positions = stacked["lengths"][:, None] + jnp.asarray(rel_pos, jnp.int32)
+        lg, _, _ = self._jit_verify(
+            self.params, tokens=jnp.asarray(tokens, jnp.int32),
+            cache=stacked, positions=positions,
+            seg_mask=jnp.asarray(seg_mask), write=False)
+        return np.asarray(lg[..., : self.cfg.vocab])
+
+    def extend_committed(self, rid_tokens: Dict[int, List[int]]) -> Dict[int, np.ndarray]:
+        """Commit accepted tokens per request; returns each request's
+        post-commit tail logits (V,). Groups by token-count so shapes stay
+        exact (SSM-state safe)."""
+        out: Dict[int, np.ndarray] = {}
+        by_len: Dict[int, List[int]] = {}
+        for rid, toks in rid_tokens.items():
+            by_len.setdefault(len(toks), []).append(rid)
+        for n, rids in by_len.items():
+            if n == 0:
+                continue
+            stacked = _stack([self.caches[r] for r in rids])
+            toks = jnp.asarray([rid_tokens[r] for r in rids], jnp.int32)
+            lg, new_cache, _ = self._jit_extend(self.params, tokens=toks,
+                                                cache=stacked)
+            for i, (r, c) in enumerate(zip(rids, _split(new_cache, len(rids)))):
+                self.caches[r] = c
+                out[r] = np.asarray(lg[i, -1, : self.cfg.vocab])
+        return out
+
+    def length(self, rid: int) -> int:
+        return int(self.caches[rid]["lengths"][0])

@@ -1,0 +1,35 @@
+import os
+import sys
+
+# smoke tests / benches must see ONE device (the dry-run sets 512 itself,
+# in a separate process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.drafters import tiny_drafter, tiny_target
+from repro.data.synthetic import DOMAINS, SyntheticCorpus
+
+
+@pytest.fixture(scope="session")
+def trained_tiny():
+    """Session fixture: a trained tiny target + 3 domain drafters (V=64,
+    sharp domains so acceptance is meaningfully > 0)."""
+    from repro.launch.train import train_model
+    V = 64
+    corpus = SyntheticCorpus(V, seed=0)
+    tcfg = tiny_target(V)
+    tparams, _ = train_model(tcfg, corpus, None, steps=80, batch=8, seq=48,
+                             verbose=False)
+    dcfg = tiny_drafter(V)
+    drafters = []
+    for i, dom in enumerate(DOMAINS[:3]):
+        dp, _ = train_model(dcfg, corpus, dom, steps=50, batch=8, seq=48,
+                            seed=i + 1, verbose=False)
+        drafters.append((dcfg, dp, dom))
+    return dict(corpus=corpus, target=(tcfg, tparams), drafters=drafters,
+                vocab=V)

@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps vs pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_reference
+from repro.kernels.tree_attention.ops import tree_attention
+from repro.kernels.tree_attention.ref import tree_attention_ref
+
+
+def _r(k, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(k), shape)
+    return x.astype(dtype)
+
+
+TREE_CASES = [
+    # (B, H, R, S, M, Dk, Dv, window, dtype)
+    (1, 1, 4, 16, 4, 16, 16, 0, jnp.float32),
+    (2, 2, 12, 40, 12, 32, 16, 0, jnp.float32),
+    (2, 1, 16, 64, 8, 64, 64, 24, jnp.float32),
+    (1, 4, 8, 100, 16, 128, 128, 0, jnp.bfloat16),
+    (3, 2, 24, 33, 10, 48, 32, 10, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", TREE_CASES)
+def test_tree_attention_matches_ref(case):
+    B, H, R, S, Msz, Dk, Dv, window, dtype = case
+    q = _r(1, (B, H, R, Dk), dtype)
+    kc, vc = _r(2, (B, H, S, Dk), dtype), _r(3, (B, H, S, Dv), dtype)
+    ks, vs = _r(4, (B, H, Msz, Dk), dtype), _r(5, (B, H, Msz, Dv), dtype)
+    n_valid = max(S - 7, 1)
+    cp = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    cp = jnp.where(cp < n_valid, cp, -1)
+    qp = n_valid + jnp.broadcast_to(jnp.arange(R) // 2, (B, R)).astype(jnp.int32)
+    mask = jax.random.bernoulli(jax.random.PRNGKey(6), 0.5, (B, R, Msz))
+    mask = mask | (jnp.arange(R)[:, None] == jnp.arange(Msz)[None, :])
+    out = tree_attention(q, kc, vc, cp, ks, vs, qp, mask, scale=0.18,
+                         window=window, interpret=True, block_q=8, block_k=16)
+    ref = tree_attention_ref(q, kc, vc, cp, ks, vs, qp, mask, scale=0.18,
+                             window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+DECODE_CASES = [
+    (1, 1, 1, 16, 16, 0, jnp.float32),
+    (2, 2, 8, 64, 32, 0, jnp.float32),
+    (2, 4, 4, 100, 64, 24, jnp.float32),
+    (4, 1, 14, 128, 128, 0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_matches_ref(case):
+    B, H, G, S, D, window, dtype = case
+    q = _r(1, (B, H, G, D), dtype)
+    kc, vc = _r(2, (B, H, S, D), dtype), _r(3, (B, H, S, D), dtype)
+    cp = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    cp = jnp.where(cp < S - 3, cp, -1)
+    qp = jnp.full((B,), S - 3, jnp.int32)
+    out = decode_attention(q, kc, vc, cp, qp, scale=0.2, window=window,
+                           interpret=True, block_k=32)
+    ref = decode_attention_ref(q, kc, vc, cp, qp, scale=0.2, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+SSD_CASES = [
+    # (b, L, H, P, G, N, chunk, dtype)
+    (1, 16, 2, 8, 1, 8, 8, jnp.float32),
+    (2, 50, 8, 16, 2, 8, 16, jnp.float32),
+    (2, 33, 4, 32, 4, 16, 8, jnp.float32),
+    (1, 64, 8, 64, 1, 32, 32, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_kernel_matches_recurrence(case):
+    b, L, H, P, G, N, chunk, dtype = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jax.random.normal(ks[0], (b, L, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, L, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (b, L, G, N))
+    C = jax.random.normal(ks[4], (b, L, G, N))
+    s0 = jax.random.normal(ks[5], (b, H, P, N)) * 0.1
+    y1, f1 = ssd(x, dt, A, B, C, chunk=chunk, initial_state=s0, interpret=True)
+    y2, f2 = ssd_reference(x, dt, A, B, C, initial_state=s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2),
+                               rtol=2e-4, atol=2e-4)

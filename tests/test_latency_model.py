@@ -1,0 +1,54 @@
+"""Latency/cost model properties + calibration round-trip."""
+import numpy as np
+
+from repro.core.latency_model import HW, LatencyModel
+
+
+def test_pipelined_never_slower_than_coupled():
+    lat = LatencyModel()
+    for b in (1, 4, 16):
+        for l in (64, 1024, 8192):
+            for g in (1, 5, 12):
+                assert lat.iteration_pipelined(b, l, g, b * g) <= \
+                    lat.iteration_coupled(b, l, g, b * g)
+
+
+def test_t_ssm_linear_in_gamma():
+    lat = LatencyModel()
+    t1 = lat.t_ssm(1, 256, 1)
+    t4 = lat.t_ssm(1, 256, 4)
+    assert abs(t4 - 4 * t1) < 1e-9
+
+
+def test_verification_cheaper_than_ar_per_token():
+    """The paper's premise: verifying Gamma tokens in one forward beats
+    Gamma AR forwards."""
+    lat = LatencyModel()
+    gamma = 5
+    t_verify = lat.t_llm(1, 256, gamma)
+    t_ar = gamma * lat.t_llm(1, 256, 1)
+    assert t_verify < t_ar
+
+
+def test_cost_model_charges_drafters():
+    lat = LatencyModel()
+    c0 = lat.cost_per_ms(0)
+    c4 = lat.cost_per_ms(4)
+    assert c4 > c0
+    assert abs((c4 - c0) * 3600.0 * 1000.0 - 4 * HW["2080Ti"]["rent"]) < 1e-9
+
+
+def test_fit_recovers_coefficients():
+    lat = LatencyModel()
+    rng = np.random.default_rng(0)
+    samples = []
+    for _ in range(40):
+        b = int(rng.integers(1, 16))
+        l = int(rng.integers(64, 4096))
+        g = int(rng.integers(1, 12))
+        samples.append((b, l, g, lat.t_ssm(b, l, g)))
+    fresh = LatencyModel(ssm_step_ms=1.0, ssm_ctx_ms_per_ktok=1.0,
+                         ssm_batch_ms=1.0)
+    fresh.fit_ssm(samples)
+    assert abs(fresh.ssm_step_ms - lat.ssm_step_ms) < 1e-6
+    assert abs(fresh.ssm_ctx_ms_per_ktok - lat.ssm_ctx_ms_per_ktok) < 1e-6

@@ -1,0 +1,134 @@
+"""Regression tests for the §Perf levers: parallel-partial decode path,
+int8 KV quantization, head-aligned sharding rules, and the loop-corrected
+HLO collective parser."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import collective_bytes_corrected, parse_computations
+from repro.configs import ARCHS
+from repro.models import model as M
+from repro.models.attention import (attend_partial, attend_partial_parallel,
+                                    make_kv_cache, write_kv, dequantize_cache)
+
+
+def test_parallel_partials_match_scan():
+    B, T, H, G, D, S = 2, 4, 2, 3, 16, 50
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, T, H, G, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    qp = jnp.full((B, T), 40, jnp.int32)
+    kp = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    kp = jnp.where(kp < 45, kp, -1)
+    a = attend_partial(q, k, v, qp, kp, scale=0.2, block=16)
+    b = attend_partial_parallel(q, k, v, qp, kp, scale=0.2, block=16)
+    # partials may differ (different m normalizers) but finalized outputs
+    # must match; compare normalized
+    fa = a[2] / jnp.where(a[1] == 0, 1, a[1])[..., None]
+    fb = b[2] / jnp.where(b[1] == 0, 1, b[1])[..., None]
+    np.testing.assert_allclose(np.asarray(fa), np.asarray(fb),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "deepseek-v3-671b"])
+def test_decode_paths_equivalent(arch):
+    base = ARCHS[arch].reduced().with_overrides(dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(1), base)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 10), 0, base.vocab)
+
+    def decode(cfg):
+        cache = M.init_cache(cfg, 2, 32, dtype=jnp.float32)
+        _, cache, _ = M.prefill(params, cfg, toks[:, :6], cache)
+        outs = []
+        for t in range(6, 10):
+            lg, cache, _ = M.decode_step(params, cfg, toks[:, t:t + 1], cache)
+            outs.append(np.asarray(lg[:, 0, :cfg.vocab]))
+        return np.stack(outs)
+
+    ref = decode(base)
+    par = decode(base.with_overrides(decode_attn="parallel", decode_block=8))
+    np.testing.assert_allclose(par, ref, rtol=2e-4, atol=2e-4)
+
+
+def test_int8_kv_quantization_roundtrip():
+    c = make_kv_cache(2, 16, 2, 8, dtype=jnp.float32, quantized=True)
+    assert c["k"].dtype == jnp.int8 and "k_scale" in c
+    k_new = jax.random.normal(jax.random.PRNGKey(0), (2, 3, 2, 8))
+    v_new = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 2, 8))
+    pos = jnp.broadcast_to(jnp.arange(3), (2, 3)).astype(jnp.int32)
+    c = write_kv(c, k_new, v_new, pos)
+    kd, vd = dequantize_cache(c)
+    np.testing.assert_allclose(np.asarray(kd[:, :3], np.float32),
+                               np.asarray(k_new), rtol=0.02, atol=0.02)
+    np.testing.assert_allclose(np.asarray(vd[:, :3], np.float32),
+                               np.asarray(v_new), rtol=0.02, atol=0.02)
+
+
+def test_int8_kv_preserves_greedy_argmax():
+    cfg = ARCHS["qwen2-0.5b"].reduced().with_overrides(dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab)
+
+    def decode(c):
+        cache = M.init_cache(c, 2, 32, dtype=jnp.float32)
+        _, cache, _ = M.prefill(params, c, toks[:, :8], cache)
+        lg, _, _ = M.decode_step(params, c, toks[:, 8:9], cache)
+        return np.asarray(lg[:, 0, :c.vocab])
+
+    ref = decode(cfg)
+    q8 = decode(cfg.with_overrides(kv_dtype="int8"))
+    assert np.abs(q8 - ref).max() < 0.5
+    assert np.array_equal(np.argmax(q8, -1), np.argmax(ref, -1))
+
+
+def test_head_aligned_sharding_replicates_misaligned_heads():
+    from repro.distributed import sharding as sh
+
+    class FM:
+        shape = {"data": 16, "model": 16}
+        axis_names = ("data", "model")
+
+    cfg = ARCHS["qwen2-0.5b"]    # 14 heads, 2 kv heads: neither divides 16
+    base = sh.param_specs(cfg, FM(), "train", head_align=False)
+    align = sh.param_specs(cfg, FM(), "train", head_align=True)
+    wq_base = base["stages"][0][0]["mixer"]["wq"]
+    wq_align = align["stages"][0][0]["mixer"]["wq"]
+    assert wq_base[2] == "model"       # baseline shards the flat dim
+    assert wq_align[2] is None         # aligned rule replicates
+    # MLP stays sharded either way
+    assert align["stages"][0][0]["ffn"]["wg"][2] == "model"
+
+
+HLO_SAMPLE = """HloModule test, is_scheduled=true
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ag = f32[8]{0} all-gather(%x), channel_id=1, replica_groups=[2,2]<=[4], dimensions={0}
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ag)
+}
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+  %ar = f32[16]{0} all-reduce(%y), channel_id=2, to_apply=%add
+  ROOT %out = f32[8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_trip_count_correction():
+    out, counts = collective_bytes_corrected(HLO_SAMPLE)
+    assert counts["all-gather"] == 1 and counts["all-reduce"] == 1
+    assert out["all-gather"] == 7 * 8 * 4      # trip-corrected
+    assert out["all-reduce"] == 16 * 4         # entry-level, x1
+
+
+def test_hlo_parser_finds_all_computations():
+    comps = parse_computations(HLO_SAMPLE)
+    entry = comps.pop("__entry__")[0]
+    assert entry == "main"
+    assert set(comps) == {"body", "cond", "main"}

@@ -1,0 +1,106 @@
+"""Scheduler (Eq. 5-8 / Alg. 2) and routing (Eq. 1-3) properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import CoSineConfig
+from repro.core.latency_model import LatencyModel
+from repro.core.request_pool import Request, RequestPool
+from repro.core.routing import AdaptiveRouter, routing_score, \
+    verification_accuracy
+from repro.core.scheduler import RequestScheduler, adaptive_speculation
+
+
+@given(st.lists(st.integers(1, 16), min_size=1, max_size=12),
+       st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_adaptive_speculation_budget(gammas, budget):
+    out = adaptive_speculation(gammas, budget, min_gamma=1)
+    assert len(out) == len(gammas)
+    assert all(1 <= g for g in out)
+    assert all(o <= g for o, g in zip(out, gammas))
+    # either within budget or every gamma already at the floor
+    assert sum(out) <= budget or all(g == 1 for g in out)
+
+
+def _mk_requests(n, lens, arrivals=None):
+    pool = RequestPool()
+    rs = []
+    for i in range(n):
+        r = pool.add(np.zeros(lens[i], np.int32), 32,
+                     arrival_ms=(arrivals[i] if arrivals else 0.0))
+        r.gamma = 4
+        rs.append(r)
+    return rs
+
+
+def test_plan_respects_constraints():
+    cfg = CoSineConfig(max_batch=4, gamma_max_total=10, t_max_ms=1e9)
+    sched = RequestScheduler(cfg, LatencyModel())
+    rs = _mk_requests(8, [10, 20, 30, 40, 50, 60, 70, 80])
+    plan = sched.plan(rs)
+    assert 1 <= len(plan.requests) <= 4
+    assert plan.big_gamma <= 10
+    assert all(g >= 1 for g in plan.gammas)
+    # length-sorted prefix property
+    sel_lens = [r.context_len for r in plan.requests]
+    assert sel_lens == sorted(sel_lens)
+
+
+def test_plan_slo_fallback():
+    cfg = CoSineConfig(max_batch=4, t_max_ms=0.001)   # infeasible SLO
+    sched = RequestScheduler(cfg, LatencyModel())
+    rs = _mk_requests(3, [10, 20, 30])
+    plan = sched.plan(rs)
+    assert len(plan.requests) == 1      # serves the shortest alone
+
+
+def test_balance_gamma_monotone_in_verify_cost():
+    cfg = CoSineConfig()
+    lat = LatencyModel()
+    sched = RequestScheduler(cfg, lat)
+    g_small = sched.balance_gamma(1, 100)
+    g_big = sched.balance_gamma(16, 20000)   # pricier verification
+    assert g_big >= g_small >= 1
+
+
+@given(st.lists(st.floats(0.01, 0.99), min_size=1, max_size=8),
+       st.lists(st.floats(0.0, 1.0), min_size=1, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_routing_score_in_unit_interval(conf, acc):
+    n = min(len(conf), len(acc))
+    s = routing_score(np.array(conf[:n]), np.array(acc[:n]))
+    assert 0.0 <= s <= 1.0
+
+
+def test_routing_score_monotone():
+    lo = routing_score(np.array([0.2, 0.2]), np.array([0.2, 0.2]))
+    hi = routing_score(np.array([0.9, 0.9]), np.array([0.9, 0.9]))
+    assert hi > lo
+
+
+def test_verification_accuracy_zero_beyond_acceptance():
+    embed = np.random.default_rng(0).normal(size=(10, 4)).astype(np.float32)
+    d = verification_accuracy(embed, np.array([1, 2, 3, 4]), [1, 2])
+    assert d.shape == (4,)
+    assert d[2] == 0.0 and d[3] == 0.0
+    assert d[0] > 0.99  # same token -> cos = 1
+
+
+def test_router_update_and_route():
+    cfg = CoSineConfig(n_drafters=4, drafters_per_request=2, alpha=0.5,
+                       beta=0.9, tau=2.0)
+    embed = np.random.default_rng(0).normal(size=(16, 8)).astype(np.float32)
+    router = AdaptiveRouter(4, cfg, embed, seed=0)
+    toks = np.zeros((4, 3), np.int64)
+    toks[2] = [1, 2, 3]                       # drafter 2 matches accepted
+    conf = np.full((4, 3), 0.9, np.float32)
+    for _ in range(8):
+        router.update(0, toks, conf, [1, 2, 3], participated=[0, 1, 2, 3])
+    m = router.vector(0)
+    assert m[2] == max(m)                     # accurate drafter scores highest
+    picks = [tuple(router.route(0, l_acc=10.0)) for _ in range(30)]
+    # exploitation mode mostly includes the best drafter
+    frac_best = np.mean([2 in p for p in picks])
+    assert frac_best > 0.6
+    assert all(len(p) == 2 for p in picks)

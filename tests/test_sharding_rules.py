@@ -1,0 +1,65 @@
+"""Sharding-rule validity: every PartitionSpec divides its dim for all 10
+archs (the dry-run compiles these for real; this is the fast structural
+check that runs in the normal single-device test suite)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.distributed import sharding as sh
+from repro.models import model as M
+
+ARCH_IDS = sorted(ARCHS)
+
+
+class FakeMesh:
+    """Structural stand-in so spec rules can be checked on 1 CPU device."""
+    def __init__(self, shape_map):
+        self.shape = dict(shape_map)
+        self.axis_names = tuple(shape_map)
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _check_specs(shapes, specs, mesh):
+    flat_s = jax.tree.leaves(shapes)
+    flat_p = jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    assert len(flat_s) == len(flat_p)
+    for arr, spec in zip(flat_s, flat_p):
+        assert len(spec) <= len(arr.shape), (arr.shape, spec)
+        for dim, axes in zip(arr.shape, spec):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            n = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % n == 0, (arr.shape, spec, dim, axes)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mode", ["train", "serve"])
+def test_param_specs_divisible(arch, mode):
+    cfg = ARCHS[arch]
+    shapes = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    for mesh in (SINGLE, MULTI):
+        specs = sh.param_specs(cfg, mesh, mode=mode)
+        _check_specs(shapes, specs, mesh)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("batch", [32, 128])
+def test_cache_specs_divisible(arch, batch):
+    cfg = ARCHS[arch]
+    for mesh in (SINGLE, MULTI):
+        shapes, specs = sh.cache_specs(cfg, mesh, batch, 256)
+        _check_specs(shapes, specs, mesh)
+
+
+def test_batch_spec_fallbacks():
+    assert sh.batch_spec(SINGLE, 256) == ("data",)
+    assert sh.batch_spec(MULTI, 256) == ("pod", "data")
+    assert sh.batch_spec(MULTI, 16) == ("data",)
+    assert sh.batch_spec(MULTI, 1) is None

@@ -1,0 +1,91 @@
+"""Speculative verification: greedy losslessness and the rejection-sampling
+distribution-preservation property (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.speculative import (accept_counts_greedy, verify_greedy,
+                                    verify_rejection)
+
+
+def test_verify_greedy_all_accept():
+    draft = jnp.array([[3, 1, 2]])
+    tl = jnp.full((1, 3, 5), -10.0)
+    tl = tl.at[0, 0, 3].set(0.).at[0, 1, 1].set(0.).at[0, 2, 2].set(0.)
+    bonus = jnp.full((1, 5), -10.0).at[0, 4].set(0.)
+    out, n = verify_greedy(draft, tl, bonus)
+    assert int(n[0]) == 4
+    assert out[0].tolist() == [3, 1, 2, 4]
+
+
+def test_verify_greedy_reject_middle():
+    draft = jnp.array([[3, 1, 2]])
+    tl = jnp.full((1, 3, 5), -10.0)
+    tl = tl.at[0, 0, 3].set(0.).at[0, 1, 0].set(0.).at[0, 2, 2].set(0.)
+    bonus = jnp.full((1, 5), -10.0).at[0, 4].set(0.)
+    out, n = verify_greedy(draft, tl, bonus)
+    assert int(n[0]) == 2           # draft[0] accepted + correction
+    assert out[0, :2].tolist() == [3, 0]
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6), st.integers(2, 8))
+@settings(max_examples=20, deadline=None)
+def test_greedy_acceptance_counts(seed, G, V):
+    rng = np.random.default_rng(seed)
+    draft = rng.integers(0, V, (3, G))
+    tgt = rng.integers(0, V, (3, G))
+    n = np.asarray(accept_counts_greedy(jnp.asarray(draft), jnp.asarray(tgt)))
+    for b in range(3):
+        expect = 0
+        for i in range(G):
+            if draft[b, i] == tgt[b, i]:
+                expect += 1
+            else:
+                break
+        assert n[b] == expect
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_rejection_sampling_preserves_target_distribution(seed):
+    """Core speculative-decoding theorem: the marginal distribution of the
+    FIRST output token equals the target distribution, regardless of the
+    drafter. Empirical chi-square-ish check on a small vocab."""
+    V, G = 5, 3
+    key = jax.random.PRNGKey(seed)
+    kq, kp, kr = jax.random.split(key, 3)
+    q_logits = jax.random.normal(kq, (V,)) * 1.5
+    p_logits = jax.random.normal(kp, (V,)) * 1.5
+    q = jax.nn.softmax(q_logits)
+    p = np.asarray(jax.nn.softmax(p_logits))
+
+    N = 4000
+    keys = jax.random.split(kr, N)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        draft = jax.random.categorical(k1, jnp.broadcast_to(q_logits, (G, V)))
+        draft_lp = jnp.log(jnp.broadcast_to(q, (1, G, V)))
+        tl = jnp.broadcast_to(p_logits, (1, G, V))
+        bonus = p_logits[None]
+        out, n = verify_rejection(k2, draft[None], draft_lp, tl, bonus)
+        return out[0, 0]
+
+    first = np.asarray(jax.vmap(one)(keys))
+    emp = np.bincount(first, minlength=V) / N
+    # tolerance ~4 sigma of a multinomial proportion
+    tol = 4 * np.sqrt(p * (1 - p) / N) + 0.01
+    assert np.all(np.abs(emp - p) < tol), (emp, p)
+
+
+def test_rejection_identical_models_accept_everything():
+    V, G, B = 7, 4, 8
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (B, G, V))
+    q = jax.nn.log_softmax(logits)
+    draft = jnp.argmax(logits, -1)
+    # drafter proposes argmax, and q == p pointwise -> p/q = 1 -> all accepted
+    out, n = verify_rejection(jax.random.PRNGKey(1), draft, q, logits,
+                              logits[:, -1])
+    assert np.all(np.asarray(n) == G + 1)

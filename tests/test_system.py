@@ -1,0 +1,73 @@
+"""End-to-end system behaviour: the losslessness invariant (speculative
+serving emits exactly the target's greedy continuation) across every
+strategy, plus engine bookkeeping."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CoSineConfig
+from repro.models import model as M
+from repro.serving.engine import STRATEGIES, SpeculativeEngine
+
+
+def _greedy_reference(cfg, params, prompt, n, max_len=256):
+    cache = M.init_cache(cfg, 1, max_len, dtype=jnp.float32)
+    lg, cache, _ = M.prefill(params, cfg, jnp.asarray(prompt)[None, :], cache)
+    last = np.asarray(lg[0, -1, :cfg.vocab])
+    out = []
+    for _ in range(n):
+        t = int(np.argmax(last))
+        out.append(t)
+        lg, cache, _ = M.decode_step(params, cfg, jnp.asarray([[t]]), cache)
+        last = np.asarray(lg[0, 0, :cfg.vocab])
+    return out
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_strategy_lossless(strategy, trained_tiny):
+    tcfg, tparams = trained_tiny["target"]
+    cos = CoSineConfig(n_drafters=3, draft_len=4, drafters_per_request=2,
+                       tree_width=2)
+    eng = SpeculativeEngine((tcfg, tparams), trained_tiny["drafters"], cos,
+                            strategy=strategy, max_len=256, seed=0)
+    prompts = trained_tiny["corpus"].prompts(3, 12, seed=5)
+    for p, dom in prompts:
+        eng.submit(p, max_new_tokens=12, domain=dom)
+    stats = eng.run()
+    assert eng.pool.empty
+    assert len(eng.pool.completed) == 3
+    assert stats.total_committed == 36
+    for r in eng.pool.completed:
+        ref = _greedy_reference(tcfg, tparams, r.prompt, 12)
+        assert r.generated == ref, strategy
+
+
+def test_online_arrivals_respected(trained_tiny):
+    tcfg, tparams = trained_tiny["target"]
+    cos = CoSineConfig(n_drafters=3, draft_len=3, drafters_per_request=2)
+    eng = SpeculativeEngine((tcfg, tparams), trained_tiny["drafters"], cos,
+                            strategy="cosine", max_len=256, seed=0)
+    prompts = trained_tiny["corpus"].prompts(3, 10, seed=9)
+    arrivals = [0.0, 500.0, 10_000.0]
+    for (p, dom), t in zip(prompts, arrivals):
+        eng.submit(p, max_new_tokens=8, domain=dom, arrival_ms=t)
+    eng.run()
+    assert len(eng.pool.completed) == 3
+    for r in eng.pool.completed:
+        assert r.finish_ms >= r.arrival_ms
+        assert r.first_token_ms >= r.arrival_ms
+
+
+def test_engine_acceptance_bookkeeping(trained_tiny):
+    tcfg, tparams = trained_tiny["target"]
+    cos = CoSineConfig(n_drafters=3, draft_len=4, drafters_per_request=2)
+    eng = SpeculativeEngine((tcfg, tparams), trained_tiny["drafters"], cos,
+                            strategy="cosine", max_len=256, seed=0)
+    p, dom = trained_tiny["corpus"].prompts(1, 10, seed=11)[0]
+    eng.submit(p, max_new_tokens=10, domain=dom)
+    stats = eng.run()
+    r = eng.pool.completed[0]
+    assert r.n_iterations == len(stats.records)
+    assert r.n_accepted_total == 10
+    assert stats.sim_ms > 0
+    assert stats.throughput_tps > 0

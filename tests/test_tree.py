@@ -1,0 +1,84 @@
+"""Draft-tree construction + greedy tree acceptance properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tree import (accept_tree_greedy, build_tree, chain_tree,
+                             pad_trees)
+
+
+def test_chain_tree_ancestor_mask_is_lower_triangular():
+    t = chain_tree([5, 6, 7, 8])
+    m = t.ancestor_mask()
+    assert np.array_equal(m, np.tril(np.ones((4, 4), bool)))
+
+
+def test_build_tree_dedups_fused_token():
+    side_t = np.array([[9, 5], [6, 3]])   # depth 0: {9,5}; depth 1: {6,3}
+    side_p = np.array([[0.9, 0.8], [0.7, 0.3]])
+    side_d = np.array([[0, 1], [0, 1]])
+    t = build_tree(np.array([5, 6]), np.array([0.5, 0.5]),
+                   side_t, side_p, side_d, tree_width=2)
+    # fused tokens 5(d0),6(d1); side: 9 at d0 (5 deduped), 3 at d1 (6 deduped)
+    assert t.chain_len == 2
+    assert sorted(t.tokens.tolist()) == [3, 5, 6, 9]
+    side_nodes = [i for i in range(t.n_nodes) if t.drafter[i] >= 0]
+    for i in side_nodes:
+        assert t.parent[i] == t.depth[i] - 1
+
+
+def test_accept_tree_walks_main_chain():
+    t = chain_tree([5, 6, 7])
+    node_argmax = np.array([6, 7, 9])   # after 5 target wants 6, etc.
+    toks, path, corr = accept_tree_greedy(t, node_argmax, entry_argmax=5)
+    assert toks == [5, 6, 7]
+    assert corr == 9
+
+
+def test_accept_tree_takes_side_branch():
+    side_t = np.array([[4]])
+    side_p = np.array([[0.9]])
+    side_d = np.array([[1]])
+    t = build_tree(np.array([5]), np.array([0.5]), side_t, side_p, side_d, 1)
+    # entry wants 4 (the side candidate), not the fused 5
+    node_argmax = np.zeros(t.n_nodes, np.int64)
+    side_idx = [i for i in range(t.n_nodes) if t.tokens[i] == 4][0]
+    node_argmax[side_idx] = 8
+    toks, path, corr = accept_tree_greedy(t, node_argmax, entry_argmax=4)
+    assert toks == [4]
+    assert corr == 8
+
+
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(1, 3))
+@settings(max_examples=25, deadline=None)
+def test_tree_invariants(seed, K, width):
+    rng = np.random.default_rng(seed)
+    V = 10
+    chain = rng.integers(0, V, K)
+    side_t = rng.integers(0, V, (K, 3))
+    side_p = rng.random((K, 3)).astype(np.float32)
+    side_d = np.broadcast_to(np.arange(3), (K, 3))
+    t = build_tree(chain, rng.random(K), side_t, side_p, side_d, width)
+    # parents precede children; depths consistent; side nodes are leaves
+    for i in range(t.n_nodes):
+        p = t.parent[i]
+        assert p < i
+        if p >= 0:
+            assert t.depth[i] == t.depth[p] + 1
+        else:
+            assert t.depth[i] == 0
+    assert t.n_nodes <= K + K * width
+    # acceptance result is always a valid root-path of the tree + correction
+    node_argmax = rng.integers(0, V, t.n_nodes)
+    toks, path, corr = accept_tree_greedy(t, node_argmax,
+                                          int(rng.integers(0, V)))
+    assert len(toks) == len(path) <= t.n_nodes
+    for j, node in enumerate(path):
+        assert t.depth[node] == j
+
+
+def test_pad_trees_batches():
+    ts = [chain_tree([1, 2]), chain_tree([3, 4, 5])]
+    p = pad_trees(ts, 4)
+    assert p["tokens"].shape == (2, 4)
+    assert p["valid"][0].tolist() == [True, True, False, False]
+    assert p["mask"][0, 2, 2] and p["mask"][0, 3, 3]  # padded self-attend
