@@ -1,6 +1,8 @@
 """Kernel microbenchmarks: interpret-mode Pallas vs pure-jnp oracle wall
 time (CPU: correctness-bearing only — TPU timing comes from the roofline),
-plus the XLA blocked-attention path used by the serving models."""
+plus the XLA blocked-attention path used by the serving models and the
+slot-based serving-cache engine vs the legacy per-request stack/split
+flow."""
 from __future__ import annotations
 
 import time
@@ -61,4 +63,104 @@ def run(fixture=None):
     us_k = _time(ssd, x, dt, A, Bm, Cm, chunk=64, interpret=True)
     us_r = _time(ssd_reference, x, dt, A, Bm, Cm)
     rows.append(("kernel_ssd_scan_interp", us_k, f"ref_us={us_r:.0f}"))
+    rows.extend(bench_slot_cache())
     return rows
+
+
+def bench_slot_cache(B: int = 8, iters: int = 30):
+    """Per-iteration host overhead of the serving cache flows at batch B.
+
+    Three decode loops with identical device compute:
+      base  — jitted decode on one already-batched cache (lower bound:
+              pure compute + dispatch, no cache management at all)
+      stack — legacy per-request flow: stack B batch-1 pytrees, decode,
+              split back (what ModelRunner did before the slot engine)
+      slot  — slot-resident decode through ModelRunner (gather/scatter
+              inside the jitted step)
+    Host overhead is the loop time above `base`; the slot engine must
+    eliminate (>=2x reduce) the stack/split overhead.
+
+    Shapes are chosen small (shallow model, short capacity) so the
+    measurement isolates HOST dispatch/pytree cost: at bandwidth-bound
+    cache shapes the device-side gather/scatter copies grow to match
+    stack/split's byte traffic and both flows converge (the fix there is
+    scatter-free in-cache KV writes — see ROADMAP open items).
+    """
+    from repro.config import ModelConfig
+    from repro.models import model as M
+    from repro.serving.runner import ModelRunner
+
+    cfg = ModelConfig(name="bench-slot", family="dense", n_layers=4,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab=128, tie_embeddings=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = 256
+    rng = np.random.default_rng(0)
+    prompt_len = 16
+
+    jit_decode = jax.jit(M.decode_step, static_argnames=("cfg",))
+    tok_b = jnp.zeros((B, 1), jnp.int32)
+
+    # --- setup OUTSIDE the timed regions: only decode iterations are timed
+    base_cache = M.init_cache(cfg, B, max_len, dtype=jnp.float32)
+    _, base_cache, _ = M.prefill(
+        params, cfg, jnp.asarray(rng.integers(0, cfg.vocab, (B, prompt_len)),
+                                 jnp.int32), base_cache)
+
+    stack_caches = []
+    for _ in range(B):
+        c = M.init_cache(cfg, 1, max_len, dtype=jnp.float32)
+        _, c, _ = M.prefill(
+            params, cfg, jnp.asarray(rng.integers(0, cfg.vocab,
+                                                  (1, prompt_len)),
+                                     jnp.int32), c)
+        stack_caches.append(c)
+
+    runner = ModelRunner(cfg, params, max_len=max_len, n_slots=B)
+    rids = list(range(B))
+    for r in rids:
+        runner.prefill_request(r, rng.integers(0, cfg.vocab, prompt_len))
+    tok_np = np.zeros((B,), np.int32)
+
+    def loop_base():
+        nonlocal base_cache
+        lg = None
+        for _ in range(iters):
+            lg, base_cache, _ = jit_decode(params, cfg=cfg, tokens=tok_b,
+                                           cache=base_cache)
+        jax.block_until_ready(lg)
+
+    def loop_stack():
+        nonlocal stack_caches
+        lg = None
+        for _ in range(iters):
+            stacked = M.stack_caches(stack_caches)
+            lg, stacked, _ = jit_decode(params, cfg=cfg, tokens=tok_b,
+                                        cache=stacked)
+            stack_caches = M.split_cache(stacked, B)
+        jax.block_until_ready(lg)
+
+    def loop_slot():
+        for _ in range(iters):
+            runner.decode(rids, tok_np)
+        jax.block_until_ready(runner.slots.cache["lengths"])
+
+    def timed(fn):
+        fn()                       # warmup/compile
+        t0 = time.time()
+        fn()
+        return (time.time() - t0) / iters * 1e6
+
+    us_base = timed(loop_base)
+    us_stack = timed(loop_stack)
+    us_slot = timed(loop_slot)
+    # host overhead above the pure compute+dispatch floor; the slot path can
+    # land below the floor (donation updates in place), so clamp at 0 and
+    # headline the direct per-iteration speedup instead of an overhead ratio
+    ovh_stack = max(us_stack - us_base, 0.0)
+    ovh_slot = max(us_slot - us_base, 0.0)
+    return [(f"serving_slot_decode_b{B}", us_slot,
+             f"stack_us={us_stack:.0f};base_us={us_base:.0f};"
+             f"host_ovh_stack_us={ovh_stack:.0f};"
+             f"host_ovh_slot_us={ovh_slot:.0f};"
+             f"stack_vs_slot_x={us_stack / max(us_slot, 1e-9):.1f}")]

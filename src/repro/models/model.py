@@ -215,6 +215,75 @@ def split_cache(cache, n):
              "lengths": cache["lengths"][i: i + 1]} for i in range(n)]
 
 
+# ====================================================== slotted caches
+#
+# Continuous batching without host pytree traffic: one device-resident
+# cache whose batch axis is a pool of request *slots*. Steps gather the
+# active slots into a compact sub-cache, compute, and scatter results
+# back — all inside a single jitted program, so the per-step
+# stack_caches/split_cache host round-trip disappears. Inside "stages"
+# the slot (batch) axis is 1 (axis 0 is the scan-repeat axis); "lengths"
+# carries it on axis 0 — the same layout stack_caches produces.
+
+def gather_slots(cache, slot_idx):
+    """Device-side gather of a compact sub-cache. slot_idx: (B,) int32.
+
+    The result is structurally identical to `stack_caches` over those
+    slots, so every existing step function runs on it unchanged."""
+    stages = jax.tree.map(lambda x: jnp.take(x, slot_idx, axis=1),
+                          cache["stages"])
+    return {"stages": stages,
+            "lengths": jnp.take(cache["lengths"], slot_idx, axis=0)}
+
+
+def scatter_slots(cache, sub, slot_idx):
+    """Inverse of gather_slots: write sub-cache rows back into their
+    slots. Rows with duplicate indices (scratch-slot padding) resolve
+    arbitrarily — only ever used for slots no request owns."""
+    stages = jax.tree.map(lambda full, part: full.at[:, slot_idx].set(part),
+                          cache["stages"], sub["stages"])
+    lengths = cache["lengths"].at[slot_idx].set(sub["lengths"])
+    return {"stages": stages, "lengths": lengths}
+
+
+def concat_slots(cache, extra):
+    """Append `extra`'s slots after `cache`'s (capacity growth)."""
+    stages = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=1),
+                          cache["stages"], extra["stages"])
+    lengths = jnp.concatenate([cache["lengths"], extra["lengths"]], axis=0)
+    return {"stages": stages, "lengths": lengths}
+
+
+def slot_decode_step(params, cfg: ModelConfig, tokens, cache, slot_idx):
+    """One decode step resident in the slotted cache. tokens: (B, 1);
+    slot_idx: (B,). Rows mapped to the scratch slot are compute padding —
+    their writes land in scratch and are never read."""
+    sub = gather_slots(cache, slot_idx)
+    logits, new_sub, aux = decode_step(params, cfg, tokens, sub)
+    return logits, scatter_slots(cache, new_sub, slot_idx), aux
+
+
+def slot_extend(params, cfg: ModelConfig, tokens, cache, slot_idx):
+    """Commit a (B, G) chain of accepted tokens into the slotted cache."""
+    sub = gather_slots(cache, slot_idx)
+    logits, new_sub, aux = extend(params, cfg, tokens, sub)
+    return logits, scatter_slots(cache, new_sub, slot_idx), aux
+
+
+def slot_verify_chunk(params, cfg: ModelConfig, tokens, cache, slot_idx,
+                      rel_pos, seg_mask):
+    """Tree/chain verification against slot-resident caches (no commit).
+
+    rel_pos: (B, G) node depths relative to each slot's length — absolute
+    positions are resolved on device, so no host read of lengths."""
+    sub = gather_slots(cache, slot_idx)
+    positions = sub["lengths"][:, None] + rel_pos
+    logits, _, _ = verify_chunk(params, cfg, tokens, sub,
+                                positions=positions, seg_mask=seg_mask,
+                                write=False)
+    return logits
+
+
 # ====================================================== apply
 
 def _apply_sublayer(spec: LayerSpec, p, cache, x, positions, cfg: ModelConfig,

@@ -15,6 +15,13 @@ for real by the JAX models; wall-clock of the paper's heterogeneous
 GPU deployment is accounted by the calibrated LatencyModel (DESIGN.md §3),
 so latency/throughput/cost metrics are reported in *simulated* deployment
 time while correctness (losslessness) is real.
+
+Cache ownership: each ModelRunner owns one slot-based device-resident
+cache (continuous batching); the engine addresses requests by rid and the
+runner's SlotCacheManager maps rids to slots. Prefill admits a slot,
+completion evicts it, and speculative drafting runs on discarded slot
+snapshots — there is no per-request cache dict or per-step host
+stack/split anywhere in the serving path.
 """
 from __future__ import annotations
 
@@ -138,9 +145,10 @@ class SpeculativeEngine:
         parts = [self._participants(r) for r in batch]
         fuse = self.strategy == "cosine" and self.cfg.enable_fusion
 
-        from repro.models.model import stack_caches
-        temp = [stack_caches([d.caches[r] for r in rids])
-                for d in self.drafters]
+        # slot-snapshot drafting: one device-side gather per drafter; the
+        # snapshots are decoded on and then discarded (= rollback) — the
+        # slot-resident caches only advance at commit time.
+        temp = [d.speculative_caches(rids) for d in self.drafters]
 
         prev = np.array([ (r.generated[-1] if r.generated else r.prompt[-1])
                           for r in batch], np.int32)

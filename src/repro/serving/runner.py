@@ -1,11 +1,22 @@
-"""ModelRunner: executes one model (target LLM or drafter SSM) over
-per-request KV caches with jit-compiled, shape-bucketed step functions.
+"""ModelRunner: executes one model (target LLM or drafter SSM) over a
+slot-based, device-resident batched cache with jit-compiled,
+shape-bucketed step functions.
 
-Caches are per-request (batch dim 1) pytrees from `model.init_cache`;
-batched calls stack them along axis 0, run one jitted program, and split
-back — functional continuous batching. Rollback is snapshot-based: the
-engine simply keeps the pre-draft cache object and discards speculative
-ones (correct for both attention KV and SSM recurrent state).
+Slot model (continuous batching): the runner preallocates ONE cache
+pytree whose batch axis is a pool of request *slots*. Requests are
+admitted into free slots at prefill and evicted on completion; every
+batched step gathers its active slots into a compact sub-cache,
+computes, and scatters results back — all inside a single jitted program
+(`model.slot_decode_step` / `slot_verify_chunk` / `slot_extend`), so no
+host-side pytree reassembly (`stack_caches`/`split_cache`) happens per
+step. Active-slot counts are padded to buckets to bound recompiles;
+padded rows are mapped to a dedicated scratch slot (index 0) that no
+request ever owns, so their garbage writes are never read.
+
+Speculative rollback is snapshot-based: drafting gathers a compact
+sub-cache once (`speculative_caches`, a device-side copy) and decodes on
+it without ever scattering back — discarding the snapshot IS the
+rollback (correct for both attention KV and SSM recurrent state).
 """
 from __future__ import annotations
 
@@ -20,48 +31,125 @@ from repro.config import ModelConfig
 from repro.models import model as M
 
 PREFILL_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024)
+SLOT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 
-_stack = M.stack_caches
-_split = M.split_cache
+def slot_bucket(n: int) -> int:
+    """Smallest bucket >= n (bounds the number of compiled batch shapes)."""
+    for b in SLOT_BUCKETS:
+        if b >= n:
+            return b
+    return n
+
 
 # Module-level jitted steps with cfg static: every ModelRunner with the
 # same (hashable, frozen) ModelConfig shares one compile cache — engines
-# are created freely in benchmarks without re-tracing.
-_g_prefill = jax.jit(M.prefill, static_argnames=("cfg",))
+# are created freely in benchmarks without re-tracing. The slotted cache
+# is donated where it is replaced, so XLA updates it in place.
 _g_decode = jax.jit(M.decode_step, static_argnames=("cfg",))
-_g_verify = jax.jit(M.verify_chunk, static_argnames=("cfg", "write"))
-_g_extend = jax.jit(M.extend, static_argnames=("cfg",))
+_g_slot_decode = jax.jit(M.slot_decode_step, static_argnames=("cfg",),
+                         donate_argnames=("cache",))
+_g_slot_extend = jax.jit(M.slot_extend, static_argnames=("cfg",),
+                         donate_argnames=("cache",))
+_g_slot_verify = jax.jit(M.slot_verify_chunk, static_argnames=("cfg",))
+_g_gather = jax.jit(M.gather_slots)
+_g_scatter = jax.jit(M.scatter_slots, donate_argnames=("cache",))
+
+
+class SlotCacheManager:
+    """Owns the slotted cache: slot admission/eviction/reset and
+    capacity growth (doubling — recompiles are O(log max_concurrency)).
+
+    Slot 0 is scratch (padding target); real slots are 1..n_slots.
+    """
+
+    SCRATCH = 0
+
+    def __init__(self, cfg: ModelConfig, max_len: int, n_slots: int = 8,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.dtype = dtype
+        self.n_slots = n_slots
+        self.cache = M.init_cache(cfg, n_slots + 1, max_len, dtype=dtype)
+        # pristine single-slot cache used to reset a slot on (re)admission:
+        # clears stale slot_pos / SSM state left by the previous tenant
+        self._empty = M.init_cache(cfg, 1, max_len, dtype=dtype)
+        self._free = list(range(n_slots, 0, -1))      # pop() -> slot 1 first
+        self.slot_of: Dict[int, int] = {}
+        self._idx_cache: Dict[tuple, jnp.ndarray] = {}
+
+    # -------------------------------------------------------------- admission
+    def admit(self, rid: int) -> int:
+        if rid in self.slot_of:
+            return self.slot_of[rid]
+        if not self._free:
+            self._grow()
+        slot = self._free.pop()
+        self.slot_of[rid] = slot
+        self._idx_cache.clear()
+        self.cache = _g_scatter(self.cache, self._empty,
+                                jnp.asarray([slot], jnp.int32))
+        return slot
+
+    def release(self, rid: int):
+        slot = self.slot_of.pop(rid, None)
+        if slot is not None:
+            self._free.append(slot)
+            self._idx_cache.clear()
+
+    def _grow(self):
+        extra = M.init_cache(self.cfg, self.n_slots, self.max_len,
+                             dtype=self.dtype)
+        self.cache = M.concat_slots(self.cache, extra)
+        self._free.extend(range(2 * self.n_slots, self.n_slots, -1))
+        self.n_slots *= 2
+
+    # -------------------------------------------------------------- indexing
+    def padded_idx(self, rids: Sequence[int]) -> jnp.ndarray:
+        """Bucketed (B_bucket,) slot indices; padding rows -> scratch.
+
+        Memoized per rids tuple (hot decode loops reuse the same batch for
+        many steps; invalidated on any admission/eviction)."""
+        key = tuple(rids)
+        idx = self._idx_cache.get(key)
+        if idx is None:
+            lst = [self.slot_of[r] for r in rids]
+            lst += [self.SCRATCH] * (slot_bucket(len(lst)) - len(lst))
+            idx = self._idx_cache[key] = jnp.asarray(lst, jnp.int32)
+        return idx
+
+    def length(self, rid: int) -> int:
+        return int(self.cache["lengths"][self.slot_of[rid]])
 
 
 class ModelRunner:
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, n_slots: int = 8):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.cache_dtype = cache_dtype
-        self.caches: Dict[int, dict] = {}
+        self.slots = SlotCacheManager(cfg, max_len, n_slots, cache_dtype)
         self.embed_np = np.asarray(params["embed"][: cfg.vocab], np.float32)
 
-        self._jit_prefill = partial(_g_prefill, cfg=cfg)
         self._jit_decode = partial(_g_decode, cfg=cfg)
-        self._jit_verify = partial(_g_verify, cfg=cfg)
-        self._jit_extend = partial(_g_extend, cfg=cfg)
+        self._jit_slot_decode = partial(_g_slot_decode, cfg=cfg)
+        self._jit_slot_extend = partial(_g_slot_extend, cfg=cfg)
+        self._jit_slot_verify = partial(_g_slot_verify, cfg=cfg)
 
     # ----------------------------------------------------------- lifecycle
-    def new_cache(self):
-        return M.init_cache(self.cfg, 1, self.max_len, dtype=self.cache_dtype)
-
     def prefill_request(self, rid: int, tokens: np.ndarray):
-        """Prefill a request's context; returns (last-position logits (V,),
-        mean next-token logprob of the context under this model).
+        """Admit a slot and prefill the request's context; returns
+        (last-position logits (V,), mean next-token logprob of the context
+        under this model).
 
         The logprob is the engine's content-based routing prior (paper §5:
         requests are analyzed and matched to suitable drafters before
         inference). Runs in shape buckets (exact coverage — no padded
         garbage reaches SSM states)."""
-        cache = self.new_cache()
+        self.slots.admit(rid)
+        sidx = self.slots.padded_idx([rid])
         toks = np.asarray(tokens, np.int32)
         logits = None
         ll_sum, ll_n = 0.0, 0
@@ -74,11 +162,13 @@ class ModelRunner:
                     chunk = b
             seg = jnp.asarray(toks[i: i + chunk])[None, :]
             if chunk == 1 and i > 0:
-                logits, cache, _ = self._jit_decode(self.params, tokens=seg,
-                                                    cache=cache)
+                logits, self.slots.cache, _ = self._jit_slot_decode(
+                    self.params, tokens=seg, cache=self.slots.cache,
+                    slot_idx=sidx)
             else:
-                logits, cache, _ = self._jit_extend(self.params, tokens=seg,
-                                                    cache=cache)
+                logits, self.slots.cache, _ = self._jit_slot_extend(
+                    self.params, tokens=seg, cache=self.slots.cache,
+                    slot_idx=sidx)
             # likelihood of the *next* tokens within this chunk
             nxt = toks[i + 1: i + chunk]
             if len(nxt):
@@ -88,28 +178,46 @@ class ModelRunner:
                     lp, jnp.asarray(nxt)[:, None], -1).sum())
                 ll_n += len(nxt)
             i += chunk
-        self.caches[rid] = cache
         mean_ll = ll_sum / max(ll_n, 1)
         return np.asarray(logits[0, -1, : self.cfg.vocab]), mean_ll
 
     def drop(self, rid: int):
-        self.caches.pop(rid, None)
+        self.slots.release(rid)
 
     # ----------------------------------------------------------- batched ops
+    def speculative_caches(self, rids: Sequence[int]):
+        """Device-side snapshot of the requests' slots as one compact
+        batched cache (bucketed batch). Decoding on it never touches the
+        slotted cache — discarding it is the speculative rollback."""
+        return _g_gather(self.slots.cache, self.slots.padded_idx(rids))
+
+    def _pad_rows(self, a: np.ndarray, rows: int) -> np.ndarray:
+        if a.shape[0] == rows:
+            return a
+        pad = np.zeros((rows - a.shape[0],) + a.shape[1:], a.dtype)
+        return np.concatenate([a, pad], axis=0)
+
     def decode(self, rids: Sequence[int], tokens: np.ndarray,
                caches: Optional[dict] = None):
-        """One decode step. tokens: (B,). Returns logits (B, V) and updates
-        (or returns, if `caches` passed) the stacked cache."""
-        stacked = caches if caches is not None else _stack(
-            [self.caches[r] for r in rids])
-        lg, new_cache, _ = self._jit_decode(
-            self.params, tokens=jnp.asarray(tokens, jnp.int32)[:, None],
-            cache=stacked)
-        if caches is None:
-            for r, c in zip(rids, _split(new_cache, len(rids))):
-                self.caches[r] = c
+        """One decode step. tokens: (B,). Returns logits (B, V) and, when
+        `caches` (a speculative snapshot) is passed, its updated copy;
+        otherwise the slotted cache is updated in place and None returned."""
+        B = len(rids)
+        toks = np.asarray(tokens, np.int32)
+        if caches is not None:
+            rows = int(caches["lengths"].shape[0])
+            lg, new_cache, _ = self._jit_decode(
+                self.params,
+                tokens=jnp.asarray(self._pad_rows(toks, rows))[:, None],
+                cache=caches)
+        else:
+            sidx = self.slots.padded_idx(rids)
+            lg, self.slots.cache, _ = self._jit_slot_decode(
+                self.params,
+                tokens=jnp.asarray(self._pad_rows(toks, sidx.shape[0]))[:, None],
+                cache=self.slots.cache, slot_idx=sidx)
             new_cache = None
-        return np.asarray(lg[:, 0, : self.cfg.vocab]), new_cache
+        return np.asarray(lg[:B, 0, : self.cfg.vocab]), new_cache
 
     def verify(self, rids: Sequence[int], tokens: np.ndarray,
                rel_pos: np.ndarray, seg_mask: np.ndarray) -> np.ndarray:
@@ -117,18 +225,29 @@ class ModelRunner:
 
         tokens: (B, Gmax); rel_pos: (B, Gmax) node depths; seg_mask
         (B, Gmax, Gmax) ancestor mask. Returns logits (B, Gmax, V)."""
-        stacked = _stack([self.caches[r] for r in rids])
-        positions = stacked["lengths"][:, None] + jnp.asarray(rel_pos, jnp.int32)
-        lg, _, _ = self._jit_verify(
-            self.params, tokens=jnp.asarray(tokens, jnp.int32),
-            cache=stacked, positions=positions,
-            seg_mask=jnp.asarray(seg_mask), write=False)
-        return np.asarray(lg[..., : self.cfg.vocab])
+        B, G = tokens.shape
+        sidx = self.slots.padded_idx(rids)
+        rows = int(sidx.shape[0])
+        mask = np.asarray(seg_mask, bool)
+        if rows != B:
+            # padded (scratch) rows verify a lower-triangular dummy segment
+            mask = np.concatenate(
+                [mask, np.broadcast_to(np.tril(np.ones((G, G), bool)),
+                                       (rows - B, G, G))], axis=0)
+        lg = self._jit_slot_verify(
+            self.params,
+            tokens=jnp.asarray(self._pad_rows(np.asarray(tokens, np.int32),
+                                              rows)),
+            cache=self.slots.cache, slot_idx=sidx,
+            rel_pos=jnp.asarray(self._pad_rows(np.asarray(rel_pos, np.int32),
+                                               rows)),
+            seg_mask=jnp.asarray(mask))
+        return np.asarray(lg[:B, :, : self.cfg.vocab])
 
     def extend_committed(self, rid_tokens: Dict[int, List[int]]) -> Dict[int, np.ndarray]:
-        """Commit accepted tokens per request; returns each request's
-        post-commit tail logits (V,). Groups by token-count so shapes stay
-        exact (SSM-state safe)."""
+        """Commit accepted tokens per request into the slotted cache;
+        returns each request's post-commit tail logits (V,). Groups by
+        token-count so shapes stay exact (SSM-state safe)."""
         out: Dict[int, np.ndarray] = {}
         by_len: Dict[int, List[int]] = {}
         for rid, toks in rid_tokens.items():
@@ -136,14 +255,15 @@ class ModelRunner:
         for n, rids in by_len.items():
             if n == 0:
                 continue
-            stacked = _stack([self.caches[r] for r in rids])
-            toks = jnp.asarray([rid_tokens[r] for r in rids], jnp.int32)
-            lg, new_cache, _ = self._jit_extend(self.params, tokens=toks,
-                                                cache=stacked)
-            for i, (r, c) in enumerate(zip(rids, _split(new_cache, len(rids)))):
-                self.caches[r] = c
+            sidx = self.slots.padded_idx(rids)
+            toks = np.asarray([rid_tokens[r] for r in rids], np.int32)
+            lg, self.slots.cache, _ = self._jit_slot_extend(
+                self.params,
+                tokens=jnp.asarray(self._pad_rows(toks, int(sidx.shape[0]))),
+                cache=self.slots.cache, slot_idx=sidx)
+            for i, r in enumerate(rids):
                 out[r] = np.asarray(lg[i, -1, : self.cfg.vocab])
         return out
 
     def length(self, rid: int) -> int:
-        return int(self.caches[rid]["lengths"][0])
+        return self.slots.length(rid)

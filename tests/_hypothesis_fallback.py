@@ -1,0 +1,89 @@
+"""Deterministic fallback for the property-test surface of `hypothesis`.
+
+`hypothesis` is a declared test dependency (pyproject / requirements),
+but its absence must never hard-fail collection of the tier-1 suite. The
+four property-test modules import it with a try/except falling back to
+this shim, which replays each `@given` test over a fixed-seed stream of
+pseudo-random examples drawn from minimal strategy emulations — degraded
+(no shrinking, no edge-case bias) but still exercising the properties.
+
+Only the strategy combinators the suite actually uses are implemented:
+integers, floats, booleans, sampled_from, tuples, lists.
+"""
+from __future__ import annotations
+
+import random
+from types import SimpleNamespace
+
+FALLBACK_SEED = 0xC0541
+FALLBACK_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def _tuples(*strategies):
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def _lists(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 10
+
+    def draw(rng):
+        n = rng.randint(min_size, hi)
+        return [elements.example(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+st = SimpleNamespace(integers=_integers, floats=_floats, booleans=_booleans,
+                     sampled_from=_sampled_from, tuples=_tuples, lists=_lists)
+
+
+def settings(max_examples=FALLBACK_MAX_EXAMPLES, **_kw):
+    """Records max_examples for @given; all other knobs are no-ops."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies):
+    """Replays the test over deterministic pseudo-random examples.
+
+    The wrapper takes no parameters (the real @given also strips them), so
+    pytest does not mistake strategy arguments for fixtures.
+    """
+    def deco(fn):
+        n = min(getattr(fn, "_fallback_max_examples", FALLBACK_MAX_EXAMPLES),
+                FALLBACK_MAX_EXAMPLES)
+
+        def wrapper():
+            rng = random.Random(FALLBACK_SEED)
+            for _ in range(n):
+                fn(*(s.example(rng) for s in strategies))
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

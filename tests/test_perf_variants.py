@@ -9,6 +9,9 @@ import pytest
 from repro.analysis.hlo import collective_bytes_corrected, parse_computations
 from repro.configs import ARCHS
 from repro.models import model as M
+
+# exercises decode paths across the full arch matrix (compile-heavy) — nightly tier
+pytestmark = pytest.mark.slow
 from repro.models.attention import (attend_partial, attend_partial_parallel,
                                     make_kv_cache, write_kv, dequantize_cache)
 

@@ -1,0 +1,175 @@
+"""Slot-based runner equivalence: the slot-resident continuous-batching
+cache engine (gather -> step -> scatter inside one jitted program) must
+produce logits identical to the seed's per-request flow (independent
+batch-1 caches) for prefill, decode, verify and extend — across
+attention, SSM and hybrid families — including slot reuse after eviction
+and slot-pool growth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig, SSMConfig
+from repro.models import model as M
+from repro.serving.runner import ModelRunner, SlotCacheManager, slot_bucket
+
+ATOL = 1e-5
+MAX_LEN = 96
+
+
+def _tiny(kind: str) -> ModelConfig:
+    common = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  head_dim=16, d_ff=128, vocab=50, tie_embeddings=True,
+                  dtype="float32")
+    if kind == "attn":
+        return ModelConfig(name="tiny-attn", family="dense", **common)
+    if kind == "ssm":
+        return ModelConfig(name="tiny-ssm", family="ssm",
+                           ssm=SSMConfig(d_state=16, head_dim=16,
+                                         chunk_size=16), **common)
+    return ModelConfig(name="tiny-hybrid", family="hybrid",
+                       hybrid_attn_period=2, hybrid_attn_offset=1,
+                       ssm=SSMConfig(d_state=16, head_dim=16, chunk_size=16),
+                       **common)
+
+
+class PerRequestReference:
+    """The seed cache-ownership model: one batch-1 cache pytree per
+    request, stepped independently (what stack_caches/split_cache
+    round-trips computed)."""
+
+    def __init__(self, cfg, params):
+        self.cfg, self.params = cfg, params
+        self.caches = {}
+
+    def prefill(self, rid, toks):
+        cache = M.init_cache(self.cfg, 1, MAX_LEN, dtype=jnp.float32)
+        lg, cache, _ = M.prefill(self.params, self.cfg,
+                                 jnp.asarray(toks, jnp.int32)[None], cache)
+        self.caches[rid] = cache
+        return np.asarray(lg[0, -1, : self.cfg.vocab])
+
+    def decode(self, rid, tok):
+        lg, self.caches[rid], _ = M.decode_step(
+            self.params, self.cfg, jnp.asarray([[tok]], jnp.int32),
+            self.caches[rid])
+        return np.asarray(lg[0, 0, : self.cfg.vocab])
+
+    def verify(self, rid, toks, rel_pos, seg_mask):
+        cache = self.caches[rid]
+        positions = cache["lengths"][:, None] + jnp.asarray(rel_pos,
+                                                            jnp.int32)[None]
+        lg, _, _ = M.verify_chunk(
+            self.params, self.cfg, jnp.asarray(toks, jnp.int32)[None], cache,
+            positions=positions,
+            seg_mask=jnp.asarray(seg_mask, bool)[None], write=False)
+        return np.asarray(lg[0, :, : self.cfg.vocab])
+
+    def extend(self, rid, toks):
+        lg, self.caches[rid], _ = M.extend(
+            self.params, self.cfg, jnp.asarray(toks, jnp.int32)[None],
+            self.caches[rid])
+        return np.asarray(lg[0, -1, : self.cfg.vocab])
+
+
+@pytest.fixture(params=["attn", "ssm", "hybrid"])
+def pair(request):
+    cfg = _tiny(request.param)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    # n_slots=2 so the third admission exercises slot-pool growth
+    return (ModelRunner(cfg, params, max_len=MAX_LEN, n_slots=2),
+            PerRequestReference(cfg, params), cfg)
+
+
+def test_prefill_decode_verify_extend_match(pair):
+    runner, ref, cfg = pair
+    rng = np.random.default_rng(0)
+    rids = [0, 1, 2]
+    for rid in rids:
+        toks = rng.integers(0, cfg.vocab, 7 + 3 * rid)
+        lg_s, _ = runner.prefill_request(rid, toks)
+        np.testing.assert_allclose(lg_s, ref.prefill(rid, toks), atol=ATOL)
+
+    # batched decode (bucket pads 3 -> 4 with scratch rows)
+    step = rng.integers(0, cfg.vocab, 3)
+    lg_s, _ = runner.decode(rids, step)
+    for i, rid in enumerate(rids):
+        np.testing.assert_allclose(lg_s[i], ref.decode(rid, step[i]),
+                                   atol=ATOL)
+
+    # chain verification (no commit): logits match, caches untouched
+    G = 4
+    vt = rng.integers(0, cfg.vocab, (3, G))
+    rel = np.broadcast_to(np.arange(G, dtype=np.int32), (3, G))
+    mask = np.broadcast_to(np.tril(np.ones((G, G), bool)), (3, G, G))
+    lg_s = runner.verify(rids, vt, rel, mask)
+    for i, rid in enumerate(rids):
+        np.testing.assert_allclose(lg_s[i], ref.verify(rid, vt[i], rel[i],
+                                                       mask[i]), atol=ATOL)
+
+    # ragged commit: per-request token counts differ (grouped by length)
+    commits = {0: [1, 2], 1: [3], 2: [4, 5, 6]}
+    tails = runner.extend_committed(commits)
+    for rid, toks in commits.items():
+        np.testing.assert_allclose(tails[rid], ref.extend(rid, toks),
+                                   atol=ATOL)
+        assert runner.length(rid) == int(ref.caches[rid]["lengths"][0])
+
+
+def test_slot_reuse_after_eviction(pair):
+    runner, ref, cfg = pair
+    rng = np.random.default_rng(1)
+    for rid in (0, 1):
+        toks = rng.integers(0, cfg.vocab, 8)
+        runner.prefill_request(rid, toks)
+        ref.prefill(rid, toks)
+    evicted_slot = runner.slots.slot_of[1]
+    runner.drop(1)
+
+    # the freed slot must be reused and fully reset (no KV/state leakage
+    # from the previous tenant)
+    toks = rng.integers(0, cfg.vocab, 11)
+    lg_s, _ = runner.prefill_request(9, toks)
+    assert runner.slots.slot_of[9] == evicted_slot
+    np.testing.assert_allclose(lg_s, ref.prefill(9, toks), atol=ATOL)
+
+    # survivors and the new tenant still decode identically
+    step = rng.integers(0, cfg.vocab, 2)
+    lg_s, _ = runner.decode([0, 9], step)
+    np.testing.assert_allclose(lg_s[0], ref.decode(0, step[0]), atol=ATOL)
+    np.testing.assert_allclose(lg_s[1], ref.decode(9, step[1]), atol=ATOL)
+
+
+def test_speculative_snapshot_is_rollback(pair):
+    runner, ref, cfg = pair
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, cfg.vocab, 9)
+    runner.prefill_request(0, toks)
+    ref.prefill(0, toks)
+
+    # draft on a snapshot: advances the snapshot, not the slot cache
+    snap = runner.speculative_caches([0])
+    for t in rng.integers(0, cfg.vocab, 3):
+        _, snap = runner.decode([0], np.asarray([t]), caches=snap)
+    assert runner.length(0) == len(toks)
+
+    # the slot cache then commits from its pre-draft state
+    step = int(rng.integers(0, cfg.vocab))
+    lg_s, _ = runner.decode([0], np.asarray([step]))
+    np.testing.assert_allclose(lg_s[0], ref.decode(0, step), atol=ATOL)
+
+
+def test_slot_pool_growth_and_buckets():
+    cfg = _tiny("attn")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    mgr = SlotCacheManager(cfg, MAX_LEN, n_slots=2)
+    slots = [mgr.admit(r) for r in range(5)]        # forces two doublings
+    assert len(set(slots)) == 5
+    assert SlotCacheManager.SCRATCH not in slots
+    assert mgr.n_slots == 8
+    assert int(mgr.cache["lengths"].shape[0]) == mgr.n_slots + 1
+    # bucketed index padding targets scratch
+    idx = np.asarray(mgr.padded_idx([0, 1, 4]))
+    assert idx.shape[0] == slot_bucket(3) == 4
+    assert idx[-1] == SlotCacheManager.SCRATCH
+    assert ModelRunner(cfg, params, max_len=MAX_LEN).slots is not mgr

@@ -1,7 +1,10 @@
 """Scheduler (Eq. 5-8 / Alg. 2) and routing (Eq. 1-3) properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # declared dep; degrade so collection never hard-fails
+    from _hypothesis_fallback import given, settings, st
 
 from repro.config import CoSineConfig
 from repro.core.latency_model import LatencyModel
@@ -21,6 +24,18 @@ def test_adaptive_speculation_budget(gammas, budget):
     assert all(o <= g for o, g in zip(out, gammas))
     # either within budget or every gamma already at the floor
     assert sum(out) <= budget or all(g == 1 for g in out)
+
+
+@given(st.lists(st.integers(1, 16), min_size=1, max_size=12),
+       st.integers(1, 64), st.integers(1, 4))
+@settings(max_examples=50, deadline=None)
+def test_adaptive_speculation_min_gamma_floor(gammas, budget, min_gamma):
+    out = adaptive_speculation(gammas, budget, min_gamma=min_gamma)
+    # never decremented below the floor (inputs already below it pass through)
+    assert all(o >= min(g, min_gamma) for o, g in zip(out, gammas))
+    assert all(o <= g for o, g in zip(out, gammas))
+    # budget respected unless every trimmable gamma sits at the floor
+    assert sum(out) <= budget or all(o <= min_gamma for o in out)
 
 
 def _mk_requests(n, lens, arrivals=None):
@@ -53,6 +68,51 @@ def test_plan_slo_fallback():
     rs = _mk_requests(3, [10, 20, 30])
     plan = sched.plan(rs)
     assert len(plan.requests) == 1      # serves the shortest alone
+
+
+@given(st.integers(0, 10_000), st.integers(1, 10), st.integers(1, 4),
+       st.integers(2, 32))
+@settings(max_examples=30, deadline=None)
+def test_plan_invariants(seed, n_req, min_gamma, budget):
+    rng = np.random.default_rng(seed)
+    cfg = CoSineConfig(max_batch=4, gamma_max_total=budget,
+                       min_gamma=min_gamma, t_max_ms=1e9)
+    sched = RequestScheduler(cfg, LatencyModel())
+    rs = _mk_requests(n_req, rng.integers(4, 200, n_req).tolist())
+    for r in rs:
+        r.gamma = int(rng.integers(1, 9))
+    gamma_before = {r.rid: r.gamma for r in rs}
+    plan = sched.plan(rs)
+    assert 1 <= len(plan.requests) <= cfg.max_batch
+    assert len(plan.gammas) == len(plan.requests)
+    # token budget respected unless every gamma was trimmed to the floor
+    assert plan.big_gamma <= budget or all(g <= min_gamma
+                                           for g in plan.gammas)
+    assert all(g >= min(min_gamma, gamma_before[r.rid])
+               for r, g in zip(plan.requests, plan.gammas))
+    assert all(g <= gamma_before[r.rid]
+               for r, g in zip(plan.requests, plan.gammas))
+    # planning must not mutate request state
+    assert all(r.gamma == gamma_before[r.rid] for r in rs)
+    # candidate batches are length-sorted prefixes
+    sel = [r.context_len for r in plan.requests]
+    assert sel == sorted(sel)
+    unselected = [r.context_len for r in rs if r not in plan.requests]
+    assert max(sel) <= min(unselected, default=max(sel))
+
+
+@given(st.integers(0, 10_000), st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_plan_slo_infeasible_returns_exactly_one(seed, n_req):
+    rng = np.random.default_rng(seed)
+    cfg = CoSineConfig(max_batch=4, t_max_ms=1e-9)    # nothing fits the SLO
+    sched = RequestScheduler(cfg, LatencyModel())
+    lens = rng.integers(4, 200, n_req).tolist()
+    rs = _mk_requests(n_req, lens)
+    plan = sched.plan(rs)
+    assert len(plan.requests) == 1 and len(plan.gammas) == 1
+    assert plan.gammas[0] >= cfg.min_gamma
+    assert plan.requests[0].context_len == min(lens)   # shortest served alone
 
 
 def test_balance_gamma_monotone_in_verify_cost():

@@ -10,6 +10,9 @@ from repro.configs import ARCHS
 from repro.models import model as M
 from repro.optim.optimizers import adamw, apply_updates
 
+# compiles every assigned architecture (minutes of XLA time) — nightly tier
+pytestmark = pytest.mark.slow
+
 ARCH_IDS = sorted(ARCHS)
 
 

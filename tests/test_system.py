@@ -5,6 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# every test here consumes the session-scoped trained_tiny fixture (trains
+# a target + 3 drafters) — excluded from the fast `-m "not slow"` loop
+pytestmark = pytest.mark.slow
+
 from repro.config import CoSineConfig
 from repro.models import model as M
 from repro.serving.engine import STRATEGIES, SpeculativeEngine

@@ -1,6 +1,9 @@
 """Draft-tree construction + greedy tree acceptance properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # declared dep; degrade so collection never hard-fails
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.tree import (accept_tree_greedy, build_tree, chain_tree,
                              pad_trees)
