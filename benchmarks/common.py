@@ -46,7 +46,7 @@ class Fixture:
 
 
 def build_fixture(steps_target: int = 500, steps_drafter: int = 300,
-                  verbose: bool = False) -> Fixture:
+                  verbose: bool = False, cache_dir: str | None = None) -> Fixture:
     from repro.launch.train import train_model
 
     corpus = SyntheticCorpus(VOCAB, seed=0, sharpness=SHARPNESS,
@@ -54,8 +54,13 @@ def build_fixture(steps_target: int = 500, steps_drafter: int = 300,
     tcfg = tiny_target(VOCAB)
     dcfg = tiny_drafter(VOCAB)
 
-    os.makedirs(CACHE_DIR, exist_ok=True)
-    tpath = os.path.join(CACHE_DIR, "target.msgpack")
+    # non-default training budgets (e.g. the CI quick mode) get their own
+    # checkpoint cache so they never poison the fully-trained fixture
+    cache_root = cache_dir or (
+        CACHE_DIR if (steps_target, steps_drafter) == (500, 300)
+        else CACHE_DIR + f"_{steps_target}_{steps_drafter}")
+    os.makedirs(cache_root, exist_ok=True)
+    tpath = os.path.join(cache_root, "target.msgpack")
     if os.path.exists(tpath):
         tparams, _ = load_checkpoint(tpath)
     else:
@@ -69,7 +74,7 @@ def build_fixture(steps_target: int = 500, steps_drafter: int = 300,
 
     drafters = []
     for i, dom in enumerate(DOMAINS):
-        dpath = os.path.join(CACHE_DIR, f"drafter_{dom}.msgpack")
+        dpath = os.path.join(cache_root, f"drafter_{dom}.msgpack")
         if os.path.exists(dpath):
             dparams, _ = load_checkpoint(dpath)
         else:

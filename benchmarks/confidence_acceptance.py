@@ -13,30 +13,36 @@ from repro.config import CoSineConfig
 def collect_confidence_acceptance(fixture, n_prompts: int = 6,
                                   max_new: int = 32):
     """Instrument a vanilla engine: for every drafted chain token record
-    (drafter confidence, accepted?). Returns (N, 2) array."""
+    (drafter confidence, accepted?). Returns (N, 2) array.
+
+    Note: drafter chains condition on the exact committed context (the
+    one-behind drafter caches fixed the historical duplicated-token
+    off-by-one), so acceptance rates here are the calibrated reference
+    for the fusion threshold analysis — expect them a notch above the
+    pre-fix numbers at every confidence percentile."""
     eng = fixture.engine("vanilla", n_drafters=1,
                          cosine=CoSineConfig(n_drafters=1, draft_len=5,
                                              drafters_per_request=1,
                                              tree_width=0))
     conf_acc = []
     state = {}
-    orig_draft = eng._draft
+    orig_draft = eng._draft_entries
     orig_fin = eng._finalize
 
-    def draft_probe(batch, gammas):
-        trees, all_t, all_c, parts = orig_draft(batch, gammas)
-        state["last"] = (trees, all_c)
-        return trees, all_t, all_c, parts
+    def draft_probe(batch, gammas, optimistic=None):
+        entries = orig_draft(batch, gammas, optimistic)
+        state.update({e.req.rid: e for e in entries})
+        return entries
 
     def finalize_probe(batch, committed, rec):
-        trees, all_c = state["last"]
-        for b, r in enumerate(batch):
+        for r in batch:
+            e = state[r.rid]
             n_acc = max(len(committed[r.rid]) - 1, 0)  # last = correction
-            for i in range(trees[b].chain_len):
-                conf_acc.append((float(all_c[0, b, i]), i < n_acc))
+            for i in range(e.tree.chain_len):
+                conf_acc.append((float(e.d_confs[0, i]), i < n_acc))
         return orig_fin(batch, committed, rec)
 
-    eng._draft = draft_probe
+    eng._draft_entries = draft_probe
     eng._finalize = finalize_probe
     for p, dom in fixture.corpus.prompts(n_prompts, 16, seed=31):
         eng.submit(p, max_new_tokens=max_new, domain=dom)

@@ -3,10 +3,14 @@ Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig6,table2
+  PYTHONPATH=src python -m benchmarks.run --only fig7 --quick \
+      --json BENCH_online_serving.json               # CI smoke artifact
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
 import sys
 import time
 import traceback
@@ -31,6 +35,11 @@ def main() -> None:
                     help="comma-separated substring filters")
     ap.add_argument("--skip-fixture", action="store_true",
                     help="run only benches that need no trained models")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke mode: lightly-trained fixture, reduced "
+                         "workloads for benches that support quick=")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also write the rows as a JSON artifact")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
 
@@ -43,24 +52,40 @@ def main() -> None:
         from benchmarks.common import build_fixture
         t0 = time.time()
         print(f"# building/loading benchmark fixture...", file=sys.stderr)
-        fixture = build_fixture(verbose=True)
+        if args.quick:
+            fixture = build_fixture(steps_target=160, steps_drafter=100,
+                                    verbose=True)
+        else:
+            fixture = build_fixture(verbose=True)
         print(f"# fixture ready in {time.time() - t0:.0f}s", file=sys.stderr)
 
     print("name,us_per_call,derived")
     failures = 0
+    all_rows = []
     for name, modname, needs_fx in selected:
         if needs_fx and fixture is None:
             continue
         try:
             mod = __import__(modname, fromlist=["run"])
-            rows = mod.run(fixture) if needs_fx else mod.run()
+            kw = {}
+            if args.quick and "quick" in inspect.signature(mod.run).parameters:
+                kw["quick"] = True
+            rows = mod.run(fixture, **kw) if needs_fx else mod.run(**kw)
             for r in rows:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}")
+                all_rows.append({"name": r[0], "us_per_call": float(r[1]),
+                                 "derived": r[2]})
             sys.stdout.flush()
         except Exception as e:
             failures += 1
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}")
+            all_rows.append({"name": name, "us_per_call": 0.0,
+                             "derived": f"ERROR:{type(e).__name__}:{e}"})
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"quick": args.quick, "rows": all_rows}, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

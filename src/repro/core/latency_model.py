@@ -8,6 +8,17 @@ verification server) through this calibrated analytic model, while the
 model is linear in the quantities the paper identifies (batch size b,
 critical length l, draft tokens gamma / verified tokens Gamma) and can be
 refitted from measured samples via `fit()` (least squares).
+
+Role split since the discrete-event executor (DESIGN.md §2/§3): this
+model supplies *per-stage primitives only* — `t_ssm` (one drafting pass
+on the cluster), `t_llm` (one verification forward on the server) and
+`comm_ms` (cluster->server transfer). How those stages overlap is no
+longer a formula: the executor (serving/pipeline.py) places them on
+per-stage event clocks and measures the result. The closed-form
+`iteration_coupled` remains the accounting for the coupled baselines
+(ar/vanilla/specinfer), and `iteration_pipelined` survives only as the
+scheduler's analytic planning estimate of a steady-state period — the
+serving path never charges it.
 """
 from __future__ import annotations
 
@@ -67,8 +78,11 @@ class LatencyModel:
                 + self.t_llm(b, l, big_gamma))
 
     def iteration_pipelined(self, b, l, gamma, big_gamma, n_drafters=1) -> float:
-        """Decoupled pipeline: steady-state period = max(stages) (CoSine /
-        PipeInfer); the non-dominant stage hides behind the dominant one."""
+        """Analytic steady-state period of a perfectly overlapped pipeline:
+        max(stages), the non-dominant stage hidden behind the dominant one.
+        Planning estimate only (scheduler Eq. 8 / baseline comparisons) —
+        execution-time overlap is measured by the event-driven executor,
+        which also pays invalidation redrafts this formula ignores."""
         return max(self.t_ssm(b, l, gamma, n_drafters) + self.comm_ms,
                    self.t_llm(b, l, big_gamma))
 

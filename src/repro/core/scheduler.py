@@ -9,17 +9,40 @@ of the length-sorted request list (batched latency is dominated by the
 longest member, so optimal batches are length-contiguous), with
 AdaptiveSpeculation trimming per-request draft counts gamma_i to the
 budget (Alg. 2 lines 17–20).
+
+Under the decoupled executor (DESIGN.md §2) the scheduler additionally
+sees the pipeline's *measured* state: a `PipelineObservation` carries the
+verify-queue depth and the busy fractions of both stages as observed on
+the event timeline, and `update_gamma_feedback` consumes that observed
+verifier occupancy instead of an analytic busy ratio. The `t_ttl`
+estimate inside `plan()` remains analytic — it is a planning heuristic;
+the executor measures what actually happens.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.config import CoSineConfig
 from repro.core.latency_model import LatencyModel
 from repro.core.request_pool import Request
+
+
+@dataclass
+class PipelineObservation:
+    """Measured executor state fed back into planning (DESIGN.md §2.3).
+
+    verify_busy_frac / draft_busy_frac: busy time over active span,
+    measured from the event timeline (not the analytic model).
+    queue_depth: drafted cohorts waiting for the verification server.
+    backlog: admitted requests the scheduler has not yet placed.
+    """
+    verify_busy_frac: float = 1.0
+    draft_busy_frac: float = 1.0
+    queue_depth: int = 0
+    backlog: int = 0
 
 
 def adaptive_speculation(gammas: List[int], gamma_max_total: int,
@@ -68,15 +91,35 @@ class RequestScheduler:
         return 64
 
     def plan(self, requests: Sequence[Request], pipelined: bool = True,
-             n_drafters: int = 1) -> BatchPlan:
-        """Solve Eq. (8) over length-sorted prefixes."""
+             n_drafters: int = 1,
+             observation: Optional[PipelineObservation] = None,
+             extra_ctx: Optional[Dict[int, int]] = None) -> BatchPlan:
+        """Solve Eq. (8) over length-sorted prefixes.
+
+        observation: measured pipeline state; queue pressure raises the
+          effective lambda (trim speculation when drafted work is already
+          waiting on the verifier). A starved verifier lowers it — but
+          only while the backlog is shallow: with more waiting requests
+          than a batch can hold, extra speculation per request would just
+          delay them, and the objective's t_ttl/b term should drive wider
+          batches instead.
+        extra_ctx: rid -> extra context tokens assumed beyond the
+          committed state (draft-ahead plans against optimistic lengths).
+        """
         cfg = self.cfg
-        cand = sorted(requests, key=lambda r: (r.context_len, r.arrival_ms))
+        lam = cfg.lam
+        if observation is not None:
+            lam *= 1.0 + observation.queue_depth
+            if observation.verify_busy_frac < 0.8 \
+                    and observation.backlog <= cfg.max_batch:
+                lam *= 0.5                      # verifier starved: draft more
+        ctx_of = (lambda r: r.context_len + (extra_ctx or {}).get(r.rid, 0))
+        cand = sorted(requests, key=lambda r: (ctx_of(r), r.arrival_ms))
         cand = cand[: 4 * cfg.max_batch]          # bound the search
         best: BatchPlan | None = None
         for b in range(1, min(len(cand), cfg.max_batch) + 1):
             sel = cand[:b]
-            l = max(r.context_len for r in sel)
+            l = max(ctx_of(r) for r in sel)
             gam = adaptive_speculation([r.gamma for r in sel],
                                        cfg.gamma_max_total, cfg.min_gamma)
             big_g = sum(gam)
@@ -86,20 +129,20 @@ class RequestScheduler:
                      else t_ssm + self.lat.comm_ms + t_llm)
             if t_ttl > cfg.t_max_ms:
                 continue
-            mem = sum(r.context_len + g for r, g in zip(sel, gam)) \
+            mem = sum(ctx_of(r) + g for r, g in zip(sel, gam)) \
                 * self.mem_per_token
             if mem > cfg.m_max_bytes:
                 continue
             # Eq. (8): latency-per-request with a verified-token budget term.
-            obj = t_ttl / b + cfg.lam * big_g
+            obj = t_ttl / b + lam * big_g
             plan = BatchPlan(sel, gam, t_ssm, t_llm, t_ttl, obj)
             if best is None or obj < best.objective:
                 best = plan
         if best is None and cand:   # SLO-infeasible: serve the shortest alone
             r = cand[0]
             g = [max(self.cfg.min_gamma, min(r.gamma, self.cfg.gamma_max_total))]
-            t_ssm = self.lat.t_ssm(1, r.context_len, g[0], n_drafters)
-            t_llm = self.lat.t_llm(1, r.context_len, g[0])
+            t_ssm = self.lat.t_ssm(1, ctx_of(r), g[0], n_drafters)
+            t_llm = self.lat.t_llm(1, ctx_of(r), g[0])
             best = BatchPlan([r], g, t_ssm, t_llm,
                              t_ssm + self.lat.comm_ms + t_llm, float("inf"))
         return best
@@ -107,7 +150,13 @@ class RequestScheduler:
     def update_gamma_feedback(self, request: Request, n_committed: int,
                               verifier_busy_frac: float):
         """Alg. 2 adaptive control: grow gamma when the verifier has slack
-        and drafts are being accepted; shrink when overloaded/rejected."""
+        and drafts are being accepted; shrink when overloaded/rejected.
+
+        Under the decoupled executor `verifier_busy_frac` is the measured
+        occupancy of the verification stage (busy over busy+bubble, with
+        queued cohorts pushing it above 1) — observed on the event
+        timeline, not derived from the latency formulas. The coupled
+        baselines still pass their analytic t_llm/t_iter ratio."""
         if verifier_busy_frac < 0.8 and n_committed >= request.gamma:
             request.gamma = min(request.gamma + 1, 16)
         elif verifier_busy_frac > 1.2 or n_committed <= 1:

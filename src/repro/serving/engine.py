@@ -10,6 +10,17 @@ Strategies (DESIGN.md §1):
                token fusion (Eq. 4) + tree verification + collaborative
                pipeline (Eq. 5-8, Alg. 2)
 
+Execution model (DESIGN.md §2): `ar`/`vanilla`/`specinfer` run the
+coupled path — draft, then verify, strictly in sequence, with the
+iteration charged by the analytic `LatencyModel.iteration_coupled`.
+`pipeinfer`/`cosine` run on the discrete-event `PipelineExecutor`
+(serving/pipeline.py): the speculation cluster and the verification
+server advance separate simulated clocks, the cluster drafts iteration
+i+1 (optimistically, on slot snapshots) while the server verifies
+iteration i, and draft/verify overlap — including verifier bubbles,
+queueing, and draft-ahead invalidation on rejection — is *measured from
+the event timeline* rather than assumed by a formula.
+
 Token-level computation (drafting, verification, acceptance) is executed
 for real by the JAX models; wall-clock of the paper's heterogeneous
 GPU deployment is accounted by the calibrated LatencyModel (DESIGN.md §3),
@@ -21,7 +32,11 @@ cache (continuous batching); the engine addresses requests by rid and the
 runner's SlotCacheManager maps rids to slots. Prefill admits a slot,
 completion evicts it, and speculative drafting runs on discarded slot
 snapshots — there is no per-request cache dict or per-step host
-stack/split anywhere in the serving path.
+stack/split anywhere in the serving path. Drafter caches are kept one
+token *behind* the committed stream (prefilled on ctx[:-1], committed
+with [prev, toks[:-1]]) so the draft loop's first `decode(prev)` feeds
+the last committed token exactly once — drafter chains condition on the
+same context the target verifies (DESIGN.md §1.1).
 """
 from __future__ import annotations
 
@@ -37,11 +52,12 @@ from repro.core import tree as tree_mod
 from repro.core.latency_model import LatencyModel
 from repro.core.request_pool import Request, RequestPool
 from repro.core.routing import AdaptiveRouter
-from repro.core.scheduler import RequestScheduler, adaptive_speculation
-from repro.core.speculative import verify_greedy
+from repro.core.scheduler import (PipelineObservation, RequestScheduler,
+                                  adaptive_speculation)
 from repro.serving.runner import ModelRunner
 
 STRATEGIES = ("ar", "vanilla", "specinfer", "pipeinfer", "cosine")
+PIPELINED_STRATEGIES = ("pipeinfer", "cosine")
 
 
 @dataclass
@@ -52,6 +68,17 @@ class IterationRecord:
     big_gamma: int
     committed: int
     n_active_drafters: int
+    # --- stage-level timeline (DESIGN.md §2.2): measured on the event
+    # clocks for pipelined strategies, analytic decomposition for the
+    # coupled baselines (where the verifier provably idles during
+    # drafting and communication).
+    draft_start_ms: float = 0.0
+    draft_ms: float = 0.0
+    verify_start_ms: float = 0.0
+    verify_ms: float = 0.0
+    verify_idle_ms: float = 0.0          # bubble before this verification
+    queue_depth: int = 0                 # drafted cohorts waiting at commit
+    n_invalidated: int = 0               # draft-ahead entries rejected
 
 
 @dataclass
@@ -72,6 +99,50 @@ class ServeStats:
     @property
     def mean_acceptance(self) -> float:
         return self.total_committed / max(len(self.records), 1)
+
+    # --- pipeline health (DESIGN.md §2.2) ---
+    @property
+    def verifier_busy_ms(self) -> float:
+        return sum(r.verify_ms for r in self.records)
+
+    @property
+    def verifier_idle_ms(self) -> float:
+        """Total pipeline bubble time observed ahead of verifications."""
+        return sum(r.verify_idle_ms for r in self.records)
+
+    @property
+    def verifier_utilization(self) -> float:
+        busy, idle = self.verifier_busy_ms, self.verifier_idle_ms
+        return busy / max(busy + idle, 1e-9)
+
+    @property
+    def n_invalidated(self) -> int:
+        return sum(r.n_invalidated for r in self.records)
+
+
+@dataclass
+class DraftEntry:
+    """One request's drafted speculation for one iteration.
+
+    `d_toks`/`d_confs` (N, gamma) are every drafter's proposals (router
+    evidence + tree side branches); `d_chains` (N, gamma) are the tokens
+    each drafter actually *consumed* while chaining (equal to the fused
+    chain when fusion is on) — the teacher-forcing script that recreates
+    the drafter state for optimistic draft-ahead. `assumed`, when set,
+    is the context extension beyond the committed stream this draft was
+    conditioned on (draft-ahead); it is resolved against the actually
+    committed tokens when the depended-on verification lands.
+    """
+    req: Request
+    gamma: int
+    tree: tree_mod.TokenTree
+    fused_t: np.ndarray                  # (gamma,) fused main chain
+    fused_p: np.ndarray                  # (gamma,) fused confidences
+    d_toks: np.ndarray                   # (N, gamma)
+    d_confs: np.ndarray                  # (N, gamma)
+    d_chains: np.ndarray                 # (N, gamma)
+    parts: List[int]
+    assumed: Optional[List[int]] = None
 
 
 class SpeculativeEngine:
@@ -97,15 +168,25 @@ class SpeculativeEngine:
         self.stats = ServeStats()
         self.clock_ms = 0.0
         self.entry_logits: Dict[int, np.ndarray] = {}
+        # rid -> simulated time its current committed context exists from
+        # (arrival, then each commit); drafting a request earlier would
+        # violate causality in the event timeline
+        self.avail_ms: Dict[int, float] = {}
         self.rng = np.random.default_rng(seed)
         # SSM/hybrid verifiers cannot apply tree masks -> chain-only trees
         self.tree_capable = self.target_cfg.family not in ("ssm", "hybrid")
+        if strategy in PIPELINED_STRATEGIES:
+            from repro.serving.pipeline import PipelineExecutor
+            self.executor: Optional[PipelineExecutor] = PipelineExecutor(self)
+        else:
+            self.executor = None
 
     # ------------------------------------------------------------ requests
     def submit(self, prompt, max_new_tokens: int = 32, domain=None,
                arrival_ms: float = 0.0) -> Request:
         r = self.pool.add(prompt, max_new_tokens, domain, arrival_ms)
         r.gamma = self.cfg.draft_len
+        self.avail_ms[r.rid] = arrival_ms
         return r
 
     def _ensure_prefilled(self, r: Request):
@@ -114,13 +195,40 @@ class SpeculativeEngine:
         ctx = list(r.prompt) + r.generated
         self.entry_logits[r.rid], _ = self.target.prefill_request(r.rid, ctx)
         if self.strategy != "ar":
+            # drafters stay one token behind the committed stream so the
+            # draft loop's first decode(prev) feeds ctx[-1] exactly once
+            # (an empty d_ctx — single-token prompt — admits a bare slot)
+            d_ctx = ctx[:-1]
             lls = []
             for d in self.drafters:
-                _, ll = d.prefill_request(r.rid, ctx)
+                _, ll = d.prefill_request(r.rid, d_ctx)
                 lls.append(ll)
             if self.strategy == "cosine" and self.cfg.enable_routing:
                 # content-based routing prior (paper §5 request analysis)
                 self.router.set_prior(r.rid, lls)
+
+    # ------------------------------------------------------------ planning
+    def _plan_cohort(self, cands: List[Request],
+                     observation: Optional[PipelineObservation] = None,
+                     extra_ctx: Optional[Dict[int, int]] = None):
+        """Pick (batch, gammas) for one iteration. cosine solves Eq. (8);
+        the baselines batch FIFO with a fixed draft length."""
+        if self.strategy == "cosine":
+            plan = self.sched.plan(
+                cands, pipelined=self.executor is not None,
+                n_drafters=self.cfg.drafters_per_request,
+                observation=observation, extra_ctx=extra_ctx)
+            return plan.requests, plan.gammas
+        batch = sorted(cands, key=lambda r: r.arrival_ms)[: self.cfg.max_batch]
+        return batch, [self.cfg.draft_len] * len(batch)
+
+    def _cohort_gammas(self, reqs: List[Request]) -> List[int]:
+        """Draft lengths for a redraft cohort (no re-planning)."""
+        if self.strategy == "cosine":
+            return adaptive_speculation([r.gamma for r in reqs],
+                                        self.cfg.gamma_max_total,
+                                        self.cfg.min_gamma)
+        return [self.cfg.draft_len] * len(reqs)
 
     # ------------------------------------------------------------ drafting
     def _participants(self, r: Request) -> List[int]:
@@ -134,13 +242,60 @@ class SpeculativeEngine:
             return list(range(n))
         return [0]
 
-    def _draft(self, batch: List[Request], gammas: List[int]):
-        """Run the speculation cluster for one iteration.
+    def n_active(self, entries: List[DraftEntry]) -> int:
+        if self.strategy == "cosine":
+            mean = sum(len(e.parts) for e in entries) / max(len(entries), 1)
+            return max(int(np.ceil(mean)), 1)
+        return len(self.drafters) if self.strategy == "specinfer" else 1
 
-        Returns per-request dicts: draft tree, plus (tokens, confs) per
-        drafter for routing updates."""
-        B = len(batch)
-        K = max(gammas)
+    def _build_entry_tree(self, chain_t, chain_p, d_toks, d_confs,
+                          parts, g: int) -> tree_mod.TokenTree:
+        """Tree for one request: fused main chain + per-drafter side
+        branches (cosine), full specinfer tree, or a bare chain."""
+        N = len(self.drafters)
+        if self.strategy == "cosine" and self.tree_capable \
+                and self.cfg.tree_width > 0:
+            side_p = np.where(np.isin(np.arange(N), parts), d_confs.T, -1.0)
+            side_d = np.broadcast_to(np.arange(N), (g, N))
+            return tree_mod.build_tree(chain_t, chain_p, d_toks.T, side_p,
+                                       side_d, self.cfg.tree_width)
+        if self.strategy == "specinfer" and self.tree_capable:
+            return tree_mod.build_tree(
+                chain_t, chain_p, d_toks.T, d_confs.T,
+                np.broadcast_to(np.arange(N), (g, N)),
+                tree_width=max(N - 1, 1))
+        return tree_mod.chain_tree(chain_t, chain_p)
+
+    def _draft_entries(self, batch: List[Request], gammas: List[int],
+                       optimistic: Optional[Dict[int, np.ndarray]] = None
+                       ) -> List[DraftEntry]:
+        """Draft one cohort. `optimistic[rid]` is an (N, n) matrix of
+        per-drafter chain tokens assumed to already extend rid's committed
+        context (draft-ahead); requests are grouped by assumption width so
+        teacher-forcing shapes stay exact (SSM-state safe)."""
+        optimistic = optimistic or {}
+        groups: Dict[int, List[int]] = {}
+        for i, r in enumerate(batch):
+            n = optimistic[r.rid].shape[1] if r.rid in optimistic else 0
+            groups.setdefault(n, []).append(i)
+        entries: List[Optional[DraftEntry]] = [None] * len(batch)
+        for n, idxs in sorted(groups.items()):
+            sub = [batch[i] for i in idxs]
+            sub_g = [gammas[i] for i in idxs]
+            teach = None
+            if n:
+                teach = np.stack([optimistic[r.rid] for r in sub], axis=1)
+            for i, e in zip(idxs, self._draft_group(sub, sub_g, teach)):
+                entries[i] = e
+        return entries  # type: ignore[return-value]
+
+    def _draft_group(self, batch: List[Request], gammas: List[int],
+                     teach: Optional[np.ndarray] = None) -> List[DraftEntry]:
+        """Run the speculation cluster for one cohort (shared batch shape).
+
+        teach: (N, B, n) per-drafter tokens to teacher-force into the slot
+        snapshots before drafting (the optimistic context extension)."""
+        B, K, N = len(batch), max(gammas), len(self.drafters)
         rids = [r.rid for r in batch]
         parts = [self._participants(r) for r in batch]
         fuse = self.strategy == "cosine" and self.cfg.enable_fusion
@@ -150,18 +305,31 @@ class SpeculativeEngine:
         # slot-resident caches only advance at commit time.
         temp = [d.speculative_caches(rids) for d in self.drafters]
 
-        prev = np.array([ (r.generated[-1] if r.generated else r.prompt[-1])
-                          for r in batch], np.int32)
-        prev_per_d = [prev.copy() for _ in self.drafters]
+        prev_last = np.array([(r.generated[-1] if r.generated
+                               else int(r.prompt[-1])) for r in batch],
+                             np.int32)
+        if teach is None:
+            prev_per_d = [prev_last.copy() for _ in self.drafters]
+        else:
+            # drafter snapshots hold committed[:-1]; replay the last
+            # committed token plus the assumed chain (minus its tail, which
+            # becomes the next decode input) to reach the optimistic state
+            prev_per_d = []
+            for di, d in enumerate(self.drafters):
+                feed = np.concatenate([prev_last[:, None], teach[di][:, :-1]],
+                                      axis=1)
+                _, temp[di] = d.extend_snapshot(temp[di], feed)
+                prev_per_d.append(teach[di][:, -1].astype(np.int32).copy())
 
-        all_tokens = np.zeros((len(self.drafters), B, K), np.int32)
-        all_confs = np.zeros((len(self.drafters), B, K), np.float32)
+        all_tokens = np.zeros((N, B, K), np.int32)
+        all_confs = np.zeros((N, B, K), np.float32)
+        d_chains = np.zeros((N, B, K), np.int32)
         chain_tokens = np.zeros((B, K), np.int32)
         chain_probs = np.zeros((B, K), np.float32)
 
         for i in range(K):
-            step_tokens = np.zeros((len(self.drafters), B), np.int32)
-            step_confs = np.full((len(self.drafters), B), -1.0, np.float32)
+            step_tokens = np.zeros((N, B), np.int32)
+            step_confs = np.full((N, B), -1.0, np.float32)
             for di, d in enumerate(self.drafters):
                 lg, temp[di] = d.decode(rids, prev_per_d[di], caches=temp[di])
                 probs = jax.nn.softmax(jnp.asarray(lg), -1)
@@ -178,7 +346,7 @@ class SpeculativeEngine:
             fused_p = np.zeros(B, np.float32)
             for b in range(B):
                 cand = parts[b]
-                masked = np.full(len(self.drafters), -1.0)
+                masked = np.full(N, -1.0)
                 masked[cand] = step_confs[cand, b]
                 best = int(np.argmax(masked))
                 fused[b] = step_tokens[best, b]
@@ -187,45 +355,102 @@ class SpeculativeEngine:
             chain_probs[:, i] = fused_p
 
             if fuse:
-                for di in range(len(self.drafters)):
+                for di in range(N):
                     prev_per_d[di] = fused.copy()
             elif self.strategy in ("specinfer", "cosine"):
                 # independent chains (SpecInfer; CoSine w/o fusion ablation)
-                for di in range(len(self.drafters)):
+                for di in range(N):
                     prev_per_d[di] = step_tokens[di].copy()
             else:  # single-drafter chain
-                for di in range(len(self.drafters)):
+                for di in range(N):
                     prev_per_d[di] = step_tokens[0].copy()
+            for di in range(N):
+                d_chains[di, :, i] = prev_per_d[di]
 
-        # ---- build trees ----
-        trees = []
+        out = []
         for b, r in enumerate(batch):
             g = gammas[b]
-            if self.strategy == "cosine" and self.tree_capable \
-                    and self.cfg.tree_width > 0:
-                side_t = all_tokens[:, b, :g].T            # (g, N)
-                side_p = np.where(
-                    np.isin(np.arange(len(self.drafters)), parts[b]),
-                    all_confs[:, b, :g].T, -1.0)
-                side_d = np.broadcast_to(np.arange(len(self.drafters)),
-                                         (g, len(self.drafters)))
-                t = tree_mod.build_tree(chain_tokens[b, :g], chain_probs[b, :g],
-                                        side_t, side_p, side_d,
-                                        self.cfg.tree_width)
-            elif self.strategy == "specinfer" and self.tree_capable:
-                t = tree_mod.build_tree(
-                    chain_tokens[b, :g], chain_probs[b, :g],
-                    all_tokens[:, b, :g].T, all_confs[:, b, :g].T,
-                    np.broadcast_to(np.arange(len(self.drafters)),
-                                    (g, len(self.drafters))),
-                    tree_width=max(len(self.drafters) - 1, 1))
-            else:
-                t = tree_mod.chain_tree(chain_tokens[b, :g], chain_probs[b, :g])
-            trees.append(t)
-        return trees, all_tokens, all_confs, parts
+            tree = self._build_entry_tree(
+                chain_tokens[b, :g], chain_probs[b, :g],
+                all_tokens[:, b, :g], all_confs[:, b, :g], parts[b], g)
+            out.append(DraftEntry(
+                req=r, gamma=g, tree=tree,
+                fused_t=chain_tokens[b, :g].copy(),
+                fused_p=chain_probs[b, :g].copy(),
+                d_toks=all_tokens[:, b, :g].copy(),
+                d_confs=all_confs[:, b, :g].copy(),
+                d_chains=d_chains[:, b, :g].copy(),
+                parts=parts[b]))
+        return out
+
+    def _shift_entry(self, e: DraftEntry) -> Optional[DraftEntry]:
+        """A surviving draft-ahead entry: its first fused token was just
+        committed as the verifier's correction token, so the remaining
+        chain is a valid draft on the new committed state."""
+        g = e.gamma - 1
+        if g < 1:
+            return None
+        tree = self._build_entry_tree(e.fused_t[1:], e.fused_p[1:],
+                                      e.d_toks[:, 1:], e.d_confs[:, 1:],
+                                      e.parts, g)
+        return DraftEntry(req=e.req, gamma=g, tree=tree,
+                          fused_t=e.fused_t[1:], fused_p=e.fused_p[1:],
+                          d_toks=e.d_toks[:, 1:], d_confs=e.d_confs[:, 1:],
+                          d_chains=e.d_chains[:, 1:], parts=e.parts)
+
+    # ------------------------------------------------------------ verify
+    def _verify_commit(self, entries: List[DraftEntry]):
+        """Batched tree verification + commit: greedy acceptance walk,
+        router update, cache extension (target exact, drafters one-behind)
+        and tail entry logits. Returns (committed, total_committed)."""
+        batch = [e.req for e in entries]
+        trees = [e.tree for e in entries]
+        M_nodes = max(t.n_nodes for t in trees)
+        padded = tree_mod.pad_trees(trees, M_nodes)
+        rids = [r.rid for r in batch]
+        node_logits = self.target.verify(rids, padded["tokens"],
+                                         padded["rel_pos"], padded["mask"])
+
+        prev_last = {r.rid: (r.generated[-1] if r.generated
+                             else int(r.prompt[-1])) for r in batch}
+        committed: Dict[int, List[int]] = {}
+        total_committed = 0
+        for b, (e, r) in enumerate(zip(entries, batch)):
+            t = trees[b]
+            node_argmax = np.argmax(node_logits[b, : t.n_nodes], -1)
+            entry_argmax = int(np.argmax(self.entry_logits[r.rid]))
+            acc_tokens, acc_nodes, correction = tree_mod.accept_tree_greedy(
+                t, node_argmax, entry_argmax)
+            toks = acc_tokens + [int(correction)]
+            remaining = r.max_new_tokens - len(r.generated)
+            toks = toks[: max(remaining, 1)]
+            if self.eos is not None and self.eos in toks:
+                toks = toks[: toks.index(self.eos) + 1]
+            committed[r.rid] = toks
+            total_committed += len(toks)
+            r.record_acceptance(len(toks), e.gamma)
+            # routing update (Eq. 1-2) from this iteration's evidence
+            if self.strategy == "cosine":
+                self.router.update(r.rid, e.d_toks, e.d_confs, toks, e.parts)
+
+        # ---- commit to target + drafters ----
+        tails = self.target.extend_committed(committed)
+        for rid, lg in tails.items():
+            self.entry_logits[rid] = lg
+        if self.drafters:
+            # one-behind invariant: drafters absorb the previously-held-back
+            # token plus all but the last newly committed one
+            d_committed = {rid: [prev_last[rid]] + toks[:-1]
+                           for rid, toks in committed.items()}
+            for d in self.drafters:
+                d.extend_committed(d_committed)
+        return committed, total_committed
 
     # ------------------------------------------------------------ one step
     def step(self) -> Optional[IterationRecord]:
+        if self.executor is not None:
+            return self.executor.step()
+
         pending = self.pool.pending(self.clock_ms)
         if not pending:
             future = [r.arrival_ms for r in self.pool.pending(float("inf"))]
@@ -239,76 +464,36 @@ class SpeculativeEngine:
 
         if self.strategy == "ar":
             return self._step_ar(pending)
+        return self._step_coupled(pending)
 
-        pipelined = self.strategy in ("pipeinfer", "cosine")
-        use_sched = self.strategy == "cosine"
-        if use_sched:
-            plan = self.sched.plan(pending, pipelined=pipelined,
-                                   n_drafters=self.cfg.drafters_per_request)
-            batch, gammas = plan.requests, plan.gammas
-        else:
-            batch = sorted(pending, key=lambda r: r.arrival_ms)[: self.cfg.max_batch]
-            gammas = [self.cfg.draft_len] * len(batch)
+    def _step_coupled(self, pending: List[Request]) -> IterationRecord:
+        batch, gammas = self._plan_cohort(pending)
+        entries = self._draft_entries(batch, gammas)
+        committed, total_committed = self._verify_commit(entries)
 
-        trees, all_tokens, all_confs, parts = self._draft(batch, gammas)
-
-        # ---- batched tree verification ----
-        M_nodes = max(t.n_nodes for t in trees)
-        padded = tree_mod.pad_trees(trees, M_nodes)
-        rids = [r.rid for r in batch]
-        node_logits = self.target.verify(rids, padded["tokens"],
-                                         padded["rel_pos"], padded["mask"])
-
-        committed: Dict[int, List[int]] = {}
-        total_committed = 0
-        for b, r in enumerate(batch):
-            t = trees[b]
-            node_argmax = np.argmax(node_logits[b, : t.n_nodes], -1)
-            entry_argmax = int(np.argmax(self.entry_logits[r.rid]))
-            acc_tokens, acc_nodes, correction = tree_mod.accept_tree_greedy(
-                t, node_argmax, entry_argmax)
-            toks = acc_tokens + [int(correction)]
-            remaining = r.max_new_tokens - len(r.generated)
-            toks = toks[: max(remaining, 1)]
-            if self.eos is not None and self.eos in toks:
-                toks = toks[: toks.index(self.eos) + 1]
-            committed[r.rid] = toks
-            total_committed += len(toks)
-            r.record_acceptance(len(toks), gammas[b])
-            # routing update (Eq. 1-2) from this iteration's evidence
-            if self.strategy == "cosine":
-                self.router.update(r.rid, all_tokens[:, b, :], all_confs[:, b, :],
-                                   toks, parts[b])
-
-        # ---- commit to target + drafters ----
-        tails = self.target.extend_committed(committed)
-        for rid, lg in tails.items():
-            self.entry_logits[rid] = lg
-        for d in self.drafters:
-            d.extend_committed(committed)
-
-        # ---- bookkeeping / simulated time ----
         b = len(batch)
         l = max(r.context_len for r in batch)
         gmax = max(gammas)
-        big_gamma = sum(t.n_nodes for t in trees)
-        n_active = (sum(len(p) for p in parts) / b if self.strategy == "cosine"
-                    else (len(self.drafters) if self.strategy == "specinfer" else 1))
-        if pipelined:
-            t_iter = self.lat.iteration_pipelined(b, l, gmax, big_gamma,
-                                                  max(int(np.ceil(n_active)), 1))
-        else:
-            t_iter = self.lat.iteration_coupled(b, l, gmax, big_gamma,
-                                                max(int(np.ceil(n_active)), 1))
-        rec = IterationRecord(self.clock_ms, t_iter, b, big_gamma,
-                              total_committed, int(np.ceil(n_active)))
+        big_gamma = sum(e.tree.n_nodes for e in entries)
+        n_active = self.n_active(entries)
+        t_ssm = self.lat.t_ssm(b, l, gmax, n_active)
+        t_llm = self.lat.t_llm(b, l, big_gamma)
+        t_iter = self.lat.iteration_coupled(b, l, gmax, big_gamma, n_active)
+        rec = IterationRecord(
+            self.clock_ms, t_iter, b, big_gamma, total_committed, n_active,
+            draft_start_ms=self.clock_ms, draft_ms=t_ssm,
+            verify_start_ms=self.clock_ms + t_ssm + self.lat.comm_ms,
+            verify_ms=t_llm,
+            # coupled execution: the verifier provably waits out the whole
+            # draft + communication phase every iteration
+            verify_idle_ms=t_ssm + self.lat.comm_ms)
         self._finalize(batch, committed, rec)
         if self.strategy == "cosine":
-            busy = self.lat.t_llm(b, l, big_gamma) / max(t_iter, 1e-9)
-            for r, g in zip(batch, gammas):
-                if not r.done:
+            busy = t_llm / max(t_iter, 1e-9)
+            for e in entries:
+                if not e.req.done:
                     self.sched.update_gamma_feedback(
-                        r, len(committed[r.rid]), busy)
+                        e.req, len(committed[e.req.rid]), busy)
         return rec
 
     def _step_ar(self, pending: List[Request]) -> IterationRecord:
@@ -323,14 +508,15 @@ class SpeculativeEngine:
         b = len(batch)
         l = max(r.context_len for r in batch)
         t_iter = self.lat.t_llm(b, l, b)
-        rec = IterationRecord(self.clock_ms, t_iter, b, b, b, 0)
+        rec = IterationRecord(self.clock_ms, t_iter, b, b, b, 0,
+                              verify_start_ms=self.clock_ms, verify_ms=t_iter)
         for r in batch:
             r.record_acceptance(1, 0)
         self._finalize(batch, committed, rec)
         return rec
 
     def _finalize(self, batch, committed, rec: IterationRecord):
-        self.clock_ms += rec.t_iter_ms
+        self.clock_ms = rec.t_start_ms + rec.t_iter_ms
         self.stats.records.append(rec)
         self.stats.total_committed += rec.committed
         self.stats.total_drafted += rec.big_gamma
@@ -346,7 +532,10 @@ class SpeculativeEngine:
                 for d in self.drafters:
                     d.drop(r.rid)
                 self.entry_logits.pop(r.rid, None)
+                self.avail_ms.pop(r.rid, None)
                 self.router.drop(r.rid)
+            else:
+                self.avail_ms[r.rid] = self.clock_ms
 
     def run(self, max_iterations: int = 10_000) -> ServeStats:
         for _ in range(max_iterations):

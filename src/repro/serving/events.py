@@ -1,0 +1,107 @@
+"""Discrete-event primitives for the decoupled serving pipeline
+(DESIGN.md §2).
+
+The executor models the paper's deployment as two serial resources — the
+speculation cluster ("draft") and the verification server ("verify") —
+each advancing its own simulated clock. `StageClock` is the scheduling
+primitive: work is placed on a stage no earlier than its release time,
+and the gap between the stage becoming free and the work starting is
+*measured idle time* (a pipeline bubble), not an analytic formula.
+
+Every state transition is appended to an `EventLog` with a global
+sequence number, so the interleaving of the two stages is a
+deterministic, inspectable trace: two runs of the same engine with the
+same seed must produce byte-identical event streams (tested in
+tests/test_pipeline.py).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+DRAFT = "draft"
+VERIFY = "verify"
+
+
+@dataclass(frozen=True)
+class Event:
+    """One pipeline state transition at simulated time `t_ms`.
+
+    `seq` is a global monotone counter: events with equal timestamps have
+    a deterministic total order (host execution order), which makes the
+    trace reproducible and diffable across runs.
+    """
+    t_ms: float
+    seq: int
+    stage: str                      # DRAFT | VERIFY
+    kind: str                       # "start" | "end" | "invalidate" | ...
+    rids: Tuple[int, ...] = ()
+    info: str = ""
+
+    def key(self):
+        """Identity used by the determinism tests (everything observable)."""
+        return (round(self.t_ms, 6), self.seq, self.stage, self.kind,
+                self.rids, self.info)
+
+
+class EventLog:
+    def __init__(self):
+        self.events: List[Event] = []
+        self._seq = itertools.count()
+
+    def emit(self, t_ms: float, stage: str, kind: str,
+             rids: Tuple[int, ...] = (), info: str = "") -> Event:
+        ev = Event(float(t_ms), next(self._seq), stage, kind,
+                   tuple(int(r) for r in rids), info)
+        self.events.append(ev)
+        return ev
+
+    def trace(self):
+        return [ev.key() for ev in self.events]
+
+
+@dataclass
+class StageClock:
+    """A serial pipeline stage with busy/idle accounting.
+
+    `free_ms` is the time at which the stage can next begin work.
+    `schedule()` places one unit of work: it starts at
+    max(free_ms, not_before_ms); any gap is recorded as idle (bubble)
+    time. Busy/idle fractions here are *measured from the event
+    timeline*, which is what the adaptive speculation feedback loop
+    consumes (Alg. 2) instead of the old analytic busy ratio.
+    """
+    name: str
+    log: Optional[EventLog] = None
+    free_ms: float = 0.0
+    busy_ms: float = 0.0
+    idle_ms: float = 0.0
+    n_jobs: int = 0
+
+    def park(self, t_ms: float):
+        """Advance the stage to `t_ms` without accruing idle time: the
+        stage had no work *available* (e.g. an arrival lull), which is
+        not a pipeline bubble. Never moves the clock backwards."""
+        if t_ms > self.free_ms:
+            self.free_ms = t_ms
+
+    def schedule(self, duration_ms: float, not_before_ms: float = 0.0,
+                 kind: str = "work", rids: Tuple[int, ...] = ()):
+        """Run `duration_ms` of work; returns (start, end, idle_gap)."""
+        start = max(self.free_ms, not_before_ms)
+        gap = start - self.free_ms
+        end = start + duration_ms
+        self.idle_ms += gap
+        self.busy_ms += duration_ms
+        self.n_jobs += 1
+        self.free_ms = end
+        if self.log is not None:
+            self.log.emit(start, self.name, f"{kind}_start", rids)
+            self.log.emit(end, self.name, f"{kind}_end", rids)
+        return start, end, gap
+
+    def busy_frac(self) -> float:
+        """Measured occupancy over the stage's active span."""
+        span = self.busy_ms + self.idle_ms
+        return self.busy_ms / span if span > 0 else 1.0

@@ -1,0 +1,270 @@
+"""Discrete-event decoupled pipeline executor (paper §4.3 Alg. 2,
+PipeInfer-style decoupling; DESIGN.md §2).
+
+Two logical stages, each a serial resource with its own simulated clock
+(`StageClock`):
+
+  speculation cluster ("draft")  --tokens-->  verification server ("verify")
+
+The cluster drafts cohort i+1 while the server verifies cohort i. For
+requests whose iteration-i verification is still in flight, drafting
+proceeds *optimistically* on slot snapshots: the drafter state is
+teacher-forced over the iteration-i fused chain (assumed fully accepted)
+and the chain simply continues. When the verification lands, each
+dependent draft is reconciled against the actually committed tokens:
+
+  * survive — every assumed token was accepted AND the verifier's
+    correction token equals the ahead-draft's first fused token; the
+    remaining chain (shifted by one) is a valid draft on the new
+    committed state and goes to verification as-is.
+  * invalidate — anything else; the entry is re-drafted from the real
+    committed state (`kind="redraft"` on the draft stage), and the
+    verifier's next start is pushed out accordingly. This is the
+    pipelined price of a rejection — it shows up as measured bubble
+    time, not as a formula term.
+
+Losslessness is preserved unconditionally: every tree that reaches
+`_verify_commit` is rooted at the *true* committed context (survivor
+shifts included), and greedy tree acceptance + correction token always
+commits exactly the target's greedy continuation regardless of what the
+drafts contain.
+
+Timing semantics (DESIGN.md §2.2): draft->verify transfers pay
+`comm_ms`; verification outcomes stream back to the central node with
+the commit decision, so a redraft may begin at the verification's end
+time (the return path overlaps the verification tail — sub-ms token
+payloads). Verifier idle (bubble) time, queueing, and stage occupancy
+are all *measured* off the event timeline; nothing here consults the
+analytic `iteration_pipelined` formula.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.core.scheduler import PipelineObservation
+from repro.serving.events import DRAFT, VERIFY, EventLog, StageClock
+
+
+@dataclass
+class DraftJob:
+    """One drafted cohort in flight between the stages."""
+    entries: List["DraftEntry"]          # noqa: F821 (engine.DraftEntry)
+    draft_start_ms: float
+    draft_ms: float
+    ready_ms: float                      # arrival at the verification server
+    n_active: int
+
+
+class PipelineExecutor:
+    """Advances one verification commit per `step()` call; the draft
+    stage runs (at most) one cohort ahead of the verifier."""
+
+    def __init__(self, engine):
+        self.eng = engine
+        self.log = EventLog()
+        self.draft = StageClock(DRAFT, self.log)
+        self.verify = StageClock(VERIFY, self.log)
+        self.next_job: Optional[DraftJob] = None
+        # measured verifier occupancy (EMA) consumed by Alg. 2's adaptive
+        # speculation feedback; >1 means drafted work queued at the server
+        self.busy_ema = 1.0
+        self.n_survived = 0
+        self.n_invalidated = 0
+
+    # --------------------------------------------------------------- state
+    def observation(self, backlog: int = 0,
+                    waiting: Optional[DraftJob] = None) -> PipelineObservation:
+        """`waiting` is a drafted cohort not yet picked up by the server;
+        it counts as queue depth only if it reached the server before the
+        server freed up (i.e. it is genuinely sitting in the queue)."""
+        queued = 1 if (waiting is not None
+                       and waiting.ready_ms < self.verify.free_ms) else 0
+        return PipelineObservation(
+            verify_busy_frac=self.verify.busy_frac(),
+            draft_busy_frac=self.draft.busy_frac(),
+            queue_depth=queued,
+            backlog=backlog)
+
+    # ------------------------------------------------------------ drafting
+    def _spawn_job(self, prev: Optional[DraftJob]) -> Optional[DraftJob]:
+        """Draft the next cohort on the draft stage.
+
+        prev is the cohort currently awaiting verification: its requests
+        are drafted ahead optimistically (assumed fully accepted). With
+        no prev (cold pipe) the stage idles until the next arrival."""
+        eng = self.eng
+        inflight = ({e.req.rid: e for e in prev.entries} if prev else {})
+        t_vis = self.draft.free_ms
+
+        def avail(r):
+            # an in-flight request's optimistic continuation is legal as
+            # soon as its previous draft exists; a fresh request only once
+            # its current committed context does (arrival / last commit)
+            if r.rid in inflight:
+                return r.arrival_ms
+            return eng.avail_ms.get(r.rid, r.arrival_ms)
+
+        everyone = eng.pool.pending(float("inf"))
+        cands = [r for r in everyone if avail(r) <= t_vis]
+        if not cands and prev is None:
+            if not everyone:
+                return None
+            t_vis = min(avail(r) for r in everyone)
+            cands = [r for r in everyone if avail(r) <= t_vis]
+            self.draft.park(t_vis)     # lull: no work existed, not a bubble
+
+        def opt_ext(r):     # optimistic tokens this commit would add
+            e = inflight.get(r.rid)
+            return (e.gamma + 1) if e is not None else 0
+
+        # skip requests that (optimistically) complete at the pending
+        # commit; if a rejection keeps them alive they re-enter next round
+        cands = [r for r in cands
+                 if r.rid not in inflight
+                 or r.max_new_tokens - len(r.generated) - opt_ext(r) > 0]
+        if not cands:
+            return None
+        for r in cands:
+            eng._ensure_prefilled(r)
+        extra = {r.rid: opt_ext(r) for r in cands if r.rid in inflight}
+        batch, gammas = eng._plan_cohort(
+            cands, observation=self.observation(backlog=len(cands),
+                                                waiting=prev),
+            extra_ctx=extra)
+        optim = {r.rid: inflight[r.rid].d_chains
+                 for r in batch if r.rid in inflight}
+        entries = eng._draft_entries(batch, gammas, optimistic=optim)
+        for e in entries:
+            if e.req.rid in optim:
+                e.assumed = [int(t) for t in inflight[e.req.rid].fused_t]
+
+        b, K = len(batch), max(gammas)
+        l = max(r.context_len + extra.get(r.rid, 0) for r in batch)
+        n_active = eng.n_active(entries)
+        t_draft = eng.lat.t_ssm(b, l, K, n_active)
+        rids = tuple(r.rid for r in batch)
+        start, end, _ = self.draft.schedule(t_draft, not_before_ms=t_vis,
+                                            kind="draft", rids=rids)
+        return DraftJob(entries, start, t_draft, end + eng.lat.comm_ms,
+                        n_active)
+
+    # ------------------------------------------------------------ reconcile
+    def _reconcile(self, ahead: DraftJob, committed: Dict[int, List[int]],
+                   t_known_ms: float) -> Optional[DraftJob]:
+        """Resolve the ahead cohort's optimistic assumptions against the
+        tokens the verification actually committed. Runs after _finalize,
+        so completed requests are marked done and the drafter slot caches
+        hold the new committed state for redrafting."""
+        eng = self.eng
+        keep, redo, invalid = [], [], []
+        for e in ahead.entries:
+            if e.req.done:
+                continue                      # finished at commit: wasted work
+            if e.assumed is None:
+                keep.append(e)                # was not dependent on the commit
+                continue
+            toks = committed.get(e.req.rid)
+            survives = (toks is not None
+                        and len(toks) == len(e.assumed) + 1
+                        and toks[:-1] == e.assumed
+                        and toks[-1] == int(e.fused_t[0]))
+            if survives:
+                self.n_survived += 1
+                shifted = eng._shift_entry(e)
+                if shifted is not None:
+                    shifted.assumed = None    # now rooted at real state
+                    keep.append(shifted)
+                else:
+                    # gamma==1: the whole ahead draft was consumed by the
+                    # commit — a full hit, not an invalidation; it just
+                    # needs fresh tokens
+                    redo.append(e.req)
+            else:
+                invalid.append(e.req)
+                redo.append(e.req)
+        self.n_invalidated += len(invalid)
+        ahead.entries = keep
+        if invalid:
+            self.log.emit(t_known_ms, DRAFT, "invalidate",
+                          tuple(r.rid for r in invalid))
+        if redo:
+            gammas = eng._cohort_gammas(redo)
+            redo_entries = eng._draft_entries(redo, gammas)
+            b, K = len(redo), max(gammas)
+            l = max(r.context_len for r in redo)
+            n_active = eng.n_active(redo_entries)
+            t_red = eng.lat.t_ssm(b, l, K, n_active)
+            start, end, _ = self.draft.schedule(
+                t_red, not_before_ms=t_known_ms, kind="redraft",
+                rids=tuple(r.rid for r in redo))
+            ahead.entries = keep + redo_entries
+            ahead.draft_ms += t_red
+            ahead.ready_ms = max(ahead.ready_ms, end + eng.lat.comm_ms)
+            ahead.n_active = max(ahead.n_active, n_active)
+        if not ahead.entries:
+            return None
+        return ahead
+
+    # ------------------------------------------------------------ one step
+    def step(self):
+        eng = self.eng
+        job, self.next_job = self.next_job, None
+        if job is None:
+            job = self._spawn_job(None)
+            if job is None:
+                return None
+
+        # draft-ahead for the next iteration, concurrent with this verify
+        ahead = self._spawn_job(job)
+
+        # ---- verification ----
+        batch = [e.req for e in job.entries]
+        b = len(batch)
+        l = max(r.context_len for r in batch)
+        big_gamma = sum(e.tree.n_nodes for e in job.entries)
+        t_llm = eng.lat.t_llm(b, l, big_gamma)
+        # idle before this cohort's drafting even began is an arrival lull
+        # (nothing verifiable could have existed), not a pipeline bubble —
+        # the coupled baselines' analytic accounting excludes lulls too
+        self.verify.park(job.draft_start_ms)
+        vfree0 = self.verify.free_ms
+        vstart, vend, bubble = self.verify.schedule(
+            t_llm, not_before_ms=job.ready_ms, kind="verify",
+            rids=tuple(r.rid for r in batch))
+        committed, total_committed = eng._verify_commit(job.entries)
+
+        # measured occupancy: wait>0 means the cohort queued at the server
+        wait = max(vfree0 - job.ready_ms, 0.0)
+        busy_obs = (t_llm + wait) / max(t_llm + bubble, 1e-9)
+        self.busy_ema = 0.6 * self.busy_ema + 0.4 * busy_obs
+
+        queue_depth = 1 if (ahead is not None and ahead.ready_ms <= vend) \
+            else 0
+        from repro.serving.engine import IterationRecord
+        # an iteration starts when its cohort's drafting did (arrival
+        # lulls sit between records, as in the coupled path's clock jumps)
+        t_start = max(eng.clock_ms, job.draft_start_ms)
+        rec = IterationRecord(
+            t_start_ms=t_start, t_iter_ms=vend - t_start,
+            batch=b, big_gamma=big_gamma, committed=total_committed,
+            n_active_drafters=job.n_active,
+            draft_start_ms=job.draft_start_ms, draft_ms=job.draft_ms,
+            verify_start_ms=vstart, verify_ms=t_llm,
+            verify_idle_ms=bubble, queue_depth=queue_depth)
+        eng._finalize(batch, committed, rec)
+
+        # Alg. 2 adaptive control driven by *observed* occupancy
+        if eng.strategy == "cosine":
+            for e in job.entries:
+                if not e.req.done:
+                    eng.sched.update_gamma_feedback(
+                        e.req, len(committed[e.req.rid]), self.busy_ema)
+
+        # resolve the ahead cohort against what actually committed
+        if ahead is not None:
+            n_inv0 = self.n_invalidated
+            ahead = self._reconcile(ahead, committed, vend)
+            rec.n_invalidated = self.n_invalidated - n_inv0
+        self.next_job = ahead
+        return rec

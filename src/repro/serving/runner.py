@@ -47,6 +47,8 @@ def slot_bucket(n: int) -> int:
 # are created freely in benchmarks without re-tracing. The slotted cache
 # is donated where it is replaced, so XLA updates it in place.
 _g_decode = jax.jit(M.decode_step, static_argnames=("cfg",))
+_g_extend_plain = jax.jit(M.extend, static_argnames=("cfg",),
+                          donate_argnames=("cache",))
 _g_slot_decode = jax.jit(M.slot_decode_step, static_argnames=("cfg",),
                          donate_argnames=("cache",))
 _g_slot_extend = jax.jit(M.slot_extend, static_argnames=("cfg",),
@@ -79,6 +81,8 @@ class SlotCacheManager:
         self.slot_of: Dict[int, int] = {}
         self._idx_cache: Dict[tuple, jnp.ndarray] = {}
 
+    IDX_CACHE_MAX = 512
+
     # -------------------------------------------------------------- admission
     def admit(self, rid: int) -> int:
         if rid in self.slot_of:
@@ -87,7 +91,9 @@ class SlotCacheManager:
             self._grow()
         slot = self._free.pop()
         self.slot_of[rid] = slot
-        self._idx_cache.clear()
+        # admission never remaps existing rids, so memoized index arrays
+        # for other batches stay valid — streaming arrivals must not evict
+        # the hot decode-batch indices
         self.cache = _g_scatter(self.cache, self._empty,
                                 jnp.asarray([slot], jnp.int32))
         return slot
@@ -96,7 +102,10 @@ class SlotCacheManager:
         slot = self.slot_of.pop(rid, None)
         if slot is not None:
             self._free.append(slot)
-            self._idx_cache.clear()
+            # only batches that contained the departing rid are stale (its
+            # slot may be re-issued to a different request)
+            for key in [k for k in self._idx_cache if rid in k]:
+                del self._idx_cache[key]
 
     def _grow(self):
         extra = M.init_cache(self.cfg, self.n_slots, self.max_len,
@@ -110,10 +119,14 @@ class SlotCacheManager:
         """Bucketed (B_bucket,) slot indices; padding rows -> scratch.
 
         Memoized per rids tuple (hot decode loops reuse the same batch for
-        many steps; invalidated on any admission/eviction)."""
+        many steps). Admissions leave the memo intact; evictions drop only
+        the entries containing the departing rid; total size is bounded by
+        IDX_CACHE_MAX (FIFO eviction of the oldest batches)."""
         key = tuple(rids)
         idx = self._idx_cache.get(key)
         if idx is None:
+            while len(self._idx_cache) >= self.IDX_CACHE_MAX:
+                self._idx_cache.pop(next(iter(self._idx_cache)))
             lst = [self.slot_of[r] for r in rids]
             lst += [self.SCRATCH] * (slot_bucket(len(lst)) - len(lst))
             idx = self._idx_cache[key] = jnp.asarray(lst, jnp.int32)
@@ -134,6 +147,7 @@ class ModelRunner:
         self.embed_np = np.asarray(params["embed"][: cfg.vocab], np.float32)
 
         self._jit_decode = partial(_g_decode, cfg=cfg)
+        self._jit_extend_plain = partial(_g_extend_plain, cfg=cfg)
         self._jit_slot_decode = partial(_g_slot_decode, cfg=cfg)
         self._jit_slot_extend = partial(_g_slot_extend, cfg=cfg)
         self._jit_slot_verify = partial(_g_slot_verify, cfg=cfg)
@@ -149,8 +163,12 @@ class ModelRunner:
         inference). Runs in shape buckets (exact coverage — no padded
         garbage reaches SSM states)."""
         self.slots.admit(rid)
-        sidx = self.slots.padded_idx([rid])
         toks = np.asarray(tokens, np.int32)
+        if len(toks) == 0:
+            # legal for one-behind drafter caches of a single-token prompt:
+            # the slot holds the empty context; the first decode() fills it
+            return None, 0.0
+        sidx = self.slots.padded_idx([rid])
         logits = None
         ll_sum, ll_n = 0.0, 0
         i = 0
@@ -190,6 +208,21 @@ class ModelRunner:
         batched cache (bucketed batch). Decoding on it never touches the
         slotted cache — discarding it is the speculative rollback."""
         return _g_gather(self.slots.cache, self.slots.padded_idx(rids))
+
+    def extend_snapshot(self, caches: dict, tokens: np.ndarray):
+        """Teacher-force `tokens` (B, T) into a speculative snapshot
+        (optimistic draft-ahead warm-up: replays an assumed context
+        extension so chaining can continue past it). Exact time shapes
+        (no padding along T — SSM-state safe); padded batch rows receive
+        garbage that is never read. Returns (last logits (B, V), caches)."""
+        B = tokens.shape[0]
+        rows = int(caches["lengths"].shape[0])
+        lg, caches, _ = self._jit_extend_plain(
+            self.params,
+            tokens=jnp.asarray(self._pad_rows(np.asarray(tokens, np.int32),
+                                              rows)),
+            cache=caches)
+        return np.asarray(lg[:B, -1, : self.cfg.vocab]), caches
 
     def _pad_rows(self, a: np.ndarray, rows: int) -> np.ndarray:
         if a.shape[0] == rows:

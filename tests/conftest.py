@@ -12,8 +12,30 @@ import jax
 import numpy as np
 import pytest
 
+from repro.config import ModelConfig, SSMConfig
 from repro.configs.drafters import tiny_drafter, tiny_target
 from repro.data.synthetic import DOMAINS, SyntheticCorpus
+
+# shared by test_runner_slots / test_pipeline: identical configs and
+# max_len keep the module-level jit caches warm across both modules
+TINY_MAX_LEN = 96
+
+
+def tiny_model_cfg(kind: str) -> ModelConfig:
+    """Random-init-able tiny config: 'attn', 'ssm' or 'hybrid'."""
+    common = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  head_dim=16, d_ff=128, vocab=50, tie_embeddings=True,
+                  dtype="float32")
+    if kind == "attn":
+        return ModelConfig(name="tiny-attn", family="dense", **common)
+    if kind == "ssm":
+        return ModelConfig(name="tiny-ssm", family="ssm",
+                           ssm=SSMConfig(d_state=16, head_dim=16,
+                                         chunk_size=16), **common)
+    return ModelConfig(name="tiny-hybrid", family="hybrid",
+                       hybrid_attn_period=2, hybrid_attn_offset=1,
+                       ssm=SSMConfig(d_state=16, head_dim=16, chunk_size=16),
+                       **common)
 
 
 @pytest.fixture(scope="session")

@@ -9,28 +9,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import ModelConfig, SSMConfig
+from conftest import TINY_MAX_LEN as MAX_LEN, tiny_model_cfg as _tiny
 from repro.models import model as M
 from repro.serving.runner import ModelRunner, SlotCacheManager, slot_bucket
 
 ATOL = 1e-5
-MAX_LEN = 96
-
-
-def _tiny(kind: str) -> ModelConfig:
-    common = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
-                  head_dim=16, d_ff=128, vocab=50, tie_embeddings=True,
-                  dtype="float32")
-    if kind == "attn":
-        return ModelConfig(name="tiny-attn", family="dense", **common)
-    if kind == "ssm":
-        return ModelConfig(name="tiny-ssm", family="ssm",
-                           ssm=SSMConfig(d_state=16, head_dim=16,
-                                         chunk_size=16), **common)
-    return ModelConfig(name="tiny-hybrid", family="hybrid",
-                       hybrid_attn_period=2, hybrid_attn_offset=1,
-                       ssm=SSMConfig(d_state=16, head_dim=16, chunk_size=16),
-                       **common)
 
 
 class PerRequestReference:
@@ -173,3 +156,62 @@ def test_slot_pool_growth_and_buckets():
     assert idx.shape[0] == slot_bucket(3) == 4
     assert idx[-1] == SlotCacheManager.SCRATCH
     assert ModelRunner(cfg, params, max_len=MAX_LEN).slots is not mgr
+
+
+def test_idx_memo_survives_admissions_and_selective_release():
+    cfg = _tiny("attn")
+    mgr = SlotCacheManager(cfg, MAX_LEN, n_slots=4)
+    for r in (0, 1, 2):
+        mgr.admit(r)
+    idx01 = mgr.padded_idx([0, 1])
+    idx2 = mgr.padded_idx([2])
+    # admitting a new request must not evict hot decode-batch indices
+    mgr.admit(7)
+    assert mgr.padded_idx([0, 1]) is idx01
+    assert mgr.padded_idx([2]) is idx2
+    # releasing rid 1 drops only the batches that contained it
+    mgr.release(1)
+    assert (0, 1) not in mgr._idx_cache
+    assert mgr.padded_idx([2]) is idx2
+    # the freed slot re-issued to a new rid resolves correctly
+    slot1 = mgr.admit(9)
+    idx9 = np.asarray(mgr.padded_idx([9]))
+    assert idx9[0] == slot1
+
+
+def test_idx_memo_size_bounded():
+    cfg = _tiny("attn")
+    mgr = SlotCacheManager(cfg, MAX_LEN, n_slots=2)
+    mgr.admit(0)
+    mgr.admit(1)
+    mgr.IDX_CACHE_MAX = 8
+    for i in range(40):
+        mgr.padded_idx([0] if i % 2 else [0, 1])
+        mgr.padded_idx([1, 0] if i % 3 else [1])
+        # unique keys: vary via tuple of repeated rids
+        mgr.padded_idx([0] * (1 + i % 5))
+    assert len(mgr._idx_cache) <= 8
+
+
+def test_extend_snapshot_matches_decode_chain(pair):
+    """Teacher-forcing a snapshot (draft-ahead warm-up) must land in the
+    same state as decoding the same tokens one by one."""
+    runner, ref, cfg = pair
+    rng = np.random.default_rng(5)
+    toks = rng.integers(0, cfg.vocab, 9)
+    runner.prefill_request(0, toks)
+    chain = rng.integers(0, cfg.vocab, 4).astype(np.int32)
+
+    snap_a = runner.speculative_caches([0])
+    for t in chain:
+        lg_a, snap_a = runner.decode([0], np.asarray([t]), caches=snap_a)
+
+    snap_b = runner.speculative_caches([0])
+    lg_b, snap_b = runner.extend_snapshot(snap_b, chain[None, :])
+    np.testing.assert_allclose(lg_a[0], lg_b[0], atol=ATOL)
+
+    # and chaining continues identically from both states
+    nxt = int(rng.integers(0, cfg.vocab))
+    la, _ = runner.decode([0], np.asarray([nxt]), caches=snap_a)
+    lb, _ = runner.decode([0], np.asarray([nxt]), caches=snap_b)
+    np.testing.assert_allclose(la[0], lb[0], atol=ATOL)
