@@ -28,7 +28,7 @@ def _time(fn, *args, iters=3, **kw):
     return (time.time() - t0) / iters * 1e6
 
 
-def run(fixture=None):
+def run(fixture=None, quick=False):
     rows = []
     B, H, R, S, Msz, D = 2, 4, 16, 512, 16, 64
     ks = [jax.random.normal(jax.random.PRNGKey(i), s) for i, s in enumerate([
@@ -64,6 +64,7 @@ def run(fixture=None):
     us_r = _time(ssd_reference, x, dt, A, Bm, Cm)
     rows.append(("kernel_ssd_scan_interp", us_k, f"ref_us={us_r:.0f}"))
     rows.extend(bench_slot_cache())
+    rows.extend(bench_write_path(quick=quick))
     return rows
 
 
@@ -81,10 +82,10 @@ def bench_slot_cache(B: int = 8, iters: int = 30):
     eliminate (>=2x reduce) the stack/split overhead.
 
     Shapes are chosen small (shallow model, short capacity) so the
-    measurement isolates HOST dispatch/pytree cost: at bandwidth-bound
-    cache shapes the device-side gather/scatter copies grow to match
-    stack/split's byte traffic and both flows converge (the fix there is
-    scatter-free in-cache KV writes — see ROADMAP open items).
+    measurement isolates HOST dispatch/pytree cost; `bench_write_path`
+    covers the bandwidth-bound regime (deep model, long capacity) where
+    the in-place slot-indexed write path must beat the old gather/scatter
+    composition on device-side byte traffic.
     """
     from repro.config import ModelConfig
     from repro.models import model as M
@@ -164,3 +165,73 @@ def bench_slot_cache(B: int = 8, iters: int = 30):
              f"host_ovh_stack_us={ovh_stack:.0f};"
              f"host_ovh_slot_us={ovh_slot:.0f};"
              f"stack_vs_slot_x={us_stack / max(us_slot, 1e-9):.1f}")]
+
+
+def bench_write_path(B: int = 8, max_len: int = 2048, n_slots: int = 16,
+                     iters: int = 20, quick: bool = False):
+    """In-place slot-indexed cache writes vs the legacy gather/scatter
+    round trip, at a bandwidth-bound shape (deep model, long max_len).
+
+    Both flows run the same jitted decode compute; the difference is
+    cache byte traffic per step:
+
+      scatter — gather_slots (bucket x capacity copy) -> decode_step ->
+                scatter_slots (bucket x capacity write-back): the PR-1
+                composition, per-step bytes scale with pool capacity.
+      inplace — apply(..., slot_idx=...): new KV rows scattered directly
+                into the donated resident cache; reads gather only the
+                active rows. Per-step written bytes scale with the number
+                of new tokens (paged-attention style).
+
+    The in-place path must win at this shape — that is the acceptance
+    criterion for the resident write path (ISSUE 3); at tiny shapes both
+    are host-dispatch-bound and converge."""
+    from functools import partial
+
+    from repro.config import ModelConfig
+    from repro.models import model as M
+    from repro.serving.runner import ModelRunner
+
+    if quick:
+        iters = 8
+    cfg = ModelConfig(name="bench-write", family="dense", n_layers=8,
+                      d_model=128, n_heads=8, n_kv_heads=4, head_dim=32,
+                      d_ff=256, vocab=128, tie_embeddings=True,
+                      dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    runner = ModelRunner(cfg, params, max_len=max_len, n_slots=n_slots)
+    rids = list(range(B))
+    for r in rids:
+        runner.prefill_request(r, rng.integers(0, cfg.vocab, 64))
+    idx = runner.slots.padded_idx(rids)
+    tok = jnp.zeros((int(idx.shape[0]), 1), jnp.int32)
+
+    jit_inplace = jax.jit(M.slot_decode_step, static_argnames=("cfg",),
+                          donate_argnames=("cache",))
+
+    def scatter_step(params, tokens, cache, slot_idx, *, cfg):
+        sub = M.gather_slots(cache, slot_idx)
+        lg, sub, aux = M.decode_step(params, cfg, tokens, sub)
+        return lg, M.scatter_slots(cache, sub, slot_idx), aux
+
+    jit_scatter = jax.jit(partial(scatter_step, cfg=cfg),
+                          donate_argnames=("cache",))
+
+    def loop(step):
+        cache = jax.tree.map(jnp.copy, runner.slots.cache)
+        lg, cache, _ = step(params, tokens=tok, cache=cache, slot_idx=idx)
+        jax.block_until_ready(lg)          # warmup/compile
+        t0 = time.time()
+        for _ in range(iters):
+            lg, cache, _ = step(params, tokens=tok, cache=cache,
+                                slot_idx=idx)
+        jax.block_until_ready(lg)
+        return (time.time() - t0) / iters * 1e6
+
+    us_in = loop(lambda params, **kw: jit_inplace(params, cfg=cfg, **kw))
+    us_sc = loop(jit_scatter)
+    return [(f"serving_write_path_b{B}_len{max_len}", us_in,
+             f"gather_scatter_us={us_sc:.0f};"
+             f"inplace_vs_scatter_x={us_sc / max(us_in, 1e-9):.2f}")]

@@ -72,6 +72,13 @@ class LatencyModel:
         return (self.llm_base_ms + self.llm_token_ms * big_gamma
                 + self.llm_ctx_ms_per_ktok * b * l / 1000.0)
 
+    def t_prefill(self, l: int) -> float:
+        """One prompt forward of l tokens on the verification server —
+        same weight pass as verification, l tokens scored in parallel.
+        The pipelined executor charges it as a verify-stage job so TTFT
+        includes the cold-start prefill (DESIGN.md §2.2)."""
+        return self.t_llm(1, l, l)
+
     def iteration_coupled(self, b, l, gamma, big_gamma, n_drafters=1) -> float:
         """Sequential draft -> verify (vanilla/SpecInfer)."""
         return (self.t_ssm(b, l, gamma, n_drafters) + self.comm_ms

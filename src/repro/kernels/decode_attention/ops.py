@@ -22,3 +22,24 @@ def decode_attention(q, k_cache, v_cache, cache_pos, q_pos, *, scale,
         window=window, block_q=max(8, G), block_k=block_k,
         interpret=interpret)
     return merge_partials([part])
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "interpret", "block_k"))
+def decode_attention_slots(q, k_cache, v_cache, cache_pos, q_pos, slot_idx,
+                           *, scale, window=0, interpret=True, block_k=512):
+    """Slot-indexed flash decode: the KV cache holds a resident slot
+    *pool* (batch axis S_pool >= B) and only rows `slot_idx` (B,) are
+    attended — the read-side counterpart of the model's in-place
+    slot-indexed cache writes. The gather stays inside the jitted
+    program (XLA fuses it into the block streaming), so the Pallas
+    kernel itself is unchanged and the fast path remains usable on the
+    slot-resident serving cache.
+
+    q: (B, Hkv, G, Dk); k_cache/v_cache: (S_pool, Hkv, C, Dk/Dv);
+    cache_pos: (S_pool, C); q_pos: (B,); slot_idx: (B,) int32.
+    """
+    k = jnp.take(k_cache, slot_idx, axis=0)
+    v = jnp.take(v_cache, slot_idx, axis=0)
+    cp = jnp.take(cache_pos, slot_idx, axis=0)
+    return decode_attention(q, k, v, cp, q_pos, scale=scale, window=window,
+                            interpret=interpret, block_k=block_k)

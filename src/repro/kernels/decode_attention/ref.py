@@ -22,3 +22,14 @@ def decode_attention_ref(q, k_cache, v_cache, cache_pos, q_pos, *,
     s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
+
+
+def decode_attention_slots_ref(q, k_cache, v_cache, cache_pos, q_pos,
+                               slot_idx, *, scale, window=0):
+    """Oracle for the slot-indexed read: caches hold the full slot pool
+    (S_pool, Hkv, C, D); only rows slot_idx (B,) are attended."""
+    k = jnp.take(k_cache, slot_idx, axis=0)
+    v = jnp.take(v_cache, slot_idx, axis=0)
+    cp = jnp.take(cache_pos, slot_idx, axis=0)
+    return decode_attention_ref(q, k, v, cp, q_pos, scale=scale,
+                                window=window)

@@ -234,24 +234,83 @@ def cache_capacity(cfg: ModelConfig, max_len: int, layer_window: int) -> int:
     return max_len
 
 
+def kv_rows(cache, k_new, v_new, positions):
+    """New-token KV rows in storage form (quantize/cast as the cache
+    does): {"k","v","slot_pos"[,"k_scale","v_scale"]} with leading (B, T).
+    These are both what `write_kv` scatters locally and the *write delta*
+    the slot-resident path defers to one top-level in-place scatter."""
+    rows = {"slot_pos": positions}
+    if "k_scale" in cache:
+        rows["k"], rows["k_scale"] = _quantize(k_new)
+        rows["v"], rows["v_scale"] = _quantize(v_new)
+    else:
+        rows["k"] = k_new.astype(cache["k"].dtype)
+        rows["v"] = v_new.astype(cache["v"].dtype)
+    return rows
+
+
+def set_rows(cache, rows, positions):
+    """Scatter `kv_rows` at slot = position % capacity (ring if capacity
+    < pos)."""
+    C = cache["slot_pos"].shape[1]
+    slot = positions % C                                   # (B, T)
+    bidx = jnp.arange(positions.shape[0])[:, None]
+    out = dict(cache)
+    for key, val in rows.items():
+        out[key] = cache[key].at[bidx, slot].set(val)
+    return out
+
+
 def write_kv(cache, k_new, v_new, positions):
     """Scatter new KV at slot = position % capacity (ring if capacity < pos)."""
-    B, C = cache["slot_pos"].shape
-    slot = positions % C                                   # (B, T)
-    bidx = jnp.arange(B)[:, None]
-    out = dict(cache)
-    if "k_scale" in cache:
-        kq, ks = _quantize(k_new)
-        vq, vs = _quantize(v_new)
-        out["k_scale"] = cache["k_scale"].at[bidx, slot].set(ks)
-        out["v_scale"] = cache["v_scale"].at[bidx, slot].set(vs)
+    return set_rows(cache, kv_rows(cache, k_new, v_new, positions), positions)
+
+
+def take_rows(cache, slot_idx):
+    """Slot-indexed gather of the active rows of a resident cache (read
+    path: attention only ever *reads* the B gathered rows; write deltas
+    are scattered at the top of the jitted step, touching new tokens
+    only)."""
+    if slot_idx is None:
+        return cache
+    return {k: jnp.take(v, slot_idx, axis=0) for k, v in cache.items()}
+
+
+def _attend_cached(qg, k_new, v_new, cache, positions, *, scale, window,
+                   block, seg_mask, slot_idx, write, par):
+    """Shared cache-backed attention core for GQA and MLA.
+
+    Gathers the active rows (slot pool or plain batch), optionally writes
+    the new tokens' KV (locally — the slot path returns the rows as a
+    write delta for the caller's top-level scatter), and attends either
+    over the written cache (plain decode/extend) or over the unmodified
+    history merged with the fresh segment (no-commit scoring / tree
+    masks). Returns (out, new_cache | write-delta | None)."""
+    B, T = positions.shape
+    sub = take_rows(cache, slot_idx)
+    new_sub, new_cache = None, None
+    if write:
+        rows = kv_rows(sub, k_new, v_new, positions)
+        new_sub = set_rows(sub, rows, positions)
+        new_cache = rows if slot_idx is not None else new_sub
+    if not write or seg_mask is not None:
+        # history (old cache, fully causal) + fresh segment
+        mask_s = seg_mask
+        if mask_s is None:
+            mask_s = jnp.broadcast_to(jnp.tril(jnp.ones((T, T), bool)),
+                                      (B, T, T))
+        ck, cv = dequantize_cache(sub)
+        out = blocked_attention(
+            qg, ck, cv, positions, sub["slot_pos"],
+            scale=scale, causal=True, window=window, block=block,
+            segment=(k_new, v_new, positions, mask_s), parallel=par)
     else:
-        kq = k_new.astype(cache["k"].dtype)
-        vq = v_new.astype(cache["v"].dtype)
-    out["k"] = cache["k"].at[bidx, slot].set(kq)
-    out["v"] = cache["v"].at[bidx, slot].set(vq)
-    out["slot_pos"] = cache["slot_pos"].at[bidx, slot].set(positions)
-    return out
+        ck, cv = dequantize_cache(new_sub)
+        out = blocked_attention(
+            qg, ck, cv, positions,
+            new_sub["slot_pos"], scale=scale, causal=True,
+            window=window, block=block, parallel=par)
+    return out, new_cache
 
 
 # =====================================================================
@@ -297,7 +356,8 @@ def _project_qkv(p, cfg: ModelConfig, x, positions, rope: bool):
 
 
 def gqa_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
-                  seg_mask=None, window=0, block=1024):
+                  seg_mask=None, window=0, block=1024, slot_idx=None,
+                  write=True):
     """Self-attention for any mode.
 
     x: (B, T, d); positions: (B, T) absolute positions of these tokens.
@@ -306,7 +366,15 @@ def gqa_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
                          cache; queries attend to cache + fresh segment.
     seg_mask: (B, T, T) extra mask among the fresh tokens (tree verification;
               entry [b,i,j] = may token i attend to token j).
-    Returns (out, cache).
+    slot_idx: (B,) — cache is a resident slot pool; row b of x lives in
+              pool slot slot_idx[b]. Reads gather the B active rows; the
+              returned "cache" is then a *write delta* (`kv_rows`) for
+              the caller to scatter in place at the top of the jitted
+              step — compute here is bit-identical to running on a
+              pre-gathered sub-cache.
+    write=False       -> no-commit scoring: returns new_cache=None and
+              fresh tokens attend via the segment merge.
+    Returns (out, new_cache | write-delta | None).
     """
     B, T, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -324,29 +392,23 @@ def gqa_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
                                 extra_mask=seg_mask, block=block)
         new_cache = None
     else:
-        new_cache = write_kv(cache, k, v, positions)
-        if seg_mask is not None:
-            # history (old cache, fully causal) + fresh segment under seg_mask
-            ck, cv = dequantize_cache(cache)
-            out = blocked_attention(
-                qg, ck, cv, positions, cache["slot_pos"],
-                scale=scale, causal=True, window=window, block=block,
-                segment=(k, v, positions, seg_mask), parallel=par)
-        else:
-            ck, cv = dequantize_cache(new_cache)
-            out = blocked_attention(
-                qg, ck, cv, positions,
-                new_cache["slot_pos"], scale=scale, causal=True,
-                window=window, block=block, parallel=par)
+        out, new_cache = _attend_cached(
+            qg, k, v, cache, positions, scale=scale, window=window,
+            block=block, seg_mask=seg_mask, slot_idx=slot_idx, write=write,
+            par=par)
     out = out.reshape(B, T, hq * hd)
     return out @ p["wo"], new_cache
 
 
-def cross_attention(p, cfg: ModelConfig, x, kv_src=None, cache=None, block=1024):
+def cross_attention(p, cfg: ModelConfig, x, kv_src=None, cache=None,
+                    block=1024, slot_idx=None, write=True):
     """Cross-attention to frontend/encoder states.
 
     kv_src: (B, S, d) encoder states (prefill: projects and caches K/V).
     cache:  {"k","v","slot_pos"} of projected cross KV (decode reuses).
+    slot_idx: (B,) — cache is a resident slot pool; fresh projections are
+    returned as a write delta (scattered in place by the caller at the
+    top of the jitted step), decode reads gather the active rows.
     """
     B, T, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -362,11 +424,23 @@ def cross_attention(p, cfg: ModelConfig, x, kv_src=None, cache=None, block=1024)
             k = k + p["bk"].reshape(hkv, hd)
             v = v + p["bv"].reshape(hkv, hd)
         slot_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-        cache = {"k": k, "v": v, "slot_pos": slot_pos}
-    k, v, slot_pos = cache["k"], cache["v"], cache["slot_pos"]
+        if slot_idx is not None and cache is not None:
+            # write delta: fresh full-row projections for the active slots
+            cache = {"k": k.astype(cache["k"].dtype),
+                     "v": v.astype(cache["v"].dtype),
+                     "slot_pos": slot_pos} if write else None
+        else:
+            cache = {"k": k, "v": v, "slot_pos": slot_pos}
+        # fresh projections are the active rows — no gather needed
+        kr, vr, spr = k, v, slot_pos
+    else:
+        sub = take_rows(cache, slot_idx)
+        kr, vr, spr = sub["k"], sub["v"], sub["slot_pos"]
+        if slot_idx is not None:
+            cache = None                 # decode: nothing to write back
     qg = q.reshape(B, T, hkv, g, hd)
     qpos = jnp.zeros((B, T), jnp.int32)  # non-causal: positions unused
-    out = blocked_attention(qg, k, v, qpos, slot_pos, scale=hd ** -0.5,
+    out = blocked_attention(qg, kr, vr, qpos, spr, scale=hd ** -0.5,
                             causal=False, window=0, block=block)
     out = out.reshape(B, T, hq * hd)
     return out @ p["wo"], cache
@@ -409,10 +483,12 @@ def _rms(x, scale, eps):
 
 
 def mla_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
-                  seg_mask=None, window=0, block=1024):
+                  seg_mask=None, window=0, block=1024, slot_idx=None,
+                  write=True):
     """Absorbed MLA: the cache holds only (c_kv ++ k_pe) per token; W_UK is
     absorbed into the query and W_UV applied to the attention output. This
-    is single-latent-head attention (Hkv=1, G=H)."""
+    is single-latent-head attention (Hkv=1, G=H). slot_idx/write as in
+    `gqa_attention` (in-place slot-pool writes / no-commit reads)."""
     m: MLAConfig = cfg.mla
     B, T, _ = x.shape
     H = cfg.n_heads
@@ -442,19 +518,10 @@ def mla_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
                                     extra_mask=seg_mask, block=block)
         new_cache = None
     else:
-        new_cache = write_kv(cache, k_eff, v_eff, positions)
-        if seg_mask is not None:
-            ck, cv = dequantize_cache(cache)
-            out_lat = blocked_attention(
-                qg, ck, cv, positions, cache["slot_pos"],
-                scale=scale, causal=True, window=window, block=block,
-                segment=(k_eff, v_eff, positions, seg_mask), parallel=par)
-        else:
-            ck, cv = dequantize_cache(new_cache)
-            out_lat = blocked_attention(
-                qg, ck, cv, positions,
-                new_cache["slot_pos"], scale=scale, causal=True,
-                window=window, block=block, parallel=par)
+        out_lat, new_cache = _attend_cached(
+            qg, k_eff, v_eff, cache, positions, scale=scale, window=window,
+            block=block, seg_mask=seg_mask, slot_idx=slot_idx, write=write,
+            par=par)
     out_lat = out_lat.reshape(B, T, H, m.kv_lora_rank)
     wuv = p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
     out = jnp.einsum("bthr,rhv->bthv", out_lat, wuv).reshape(B, T, H * m.v_head_dim)

@@ -218,12 +218,16 @@ def split_cache(cache, n):
 # ====================================================== slotted caches
 #
 # Continuous batching without host pytree traffic: one device-resident
-# cache whose batch axis is a pool of request *slots*. Steps gather the
-# active slots into a compact sub-cache, compute, and scatter results
-# back — all inside a single jitted program, so the per-step
-# stack_caches/split_cache host round-trip disappears. Inside "stages"
-# the slot (batch) axis is 1 (axis 0 is the scan-repeat axis); "lengths"
-# carries it on axis 0 — the same layout stack_caches produces.
+# cache whose batch axis is a pool of request *slots*. Resident steps
+# thread slot_idx all the way into the mixer write path (apply(...,
+# slot_idx=...)): new KV rows / recurrent states are scattered in place
+# into the active slots only (paged-attention style), and reads gather
+# just the active rows — per-step cache byte traffic scales with the
+# number of new tokens, not bucket x capacity. gather_slots survives for
+# speculative snapshots (decode-and-discard rollback) and scatter_slots
+# for slot resets on admission. Inside "stages" the slot (batch) axis is
+# 1 (axis 0 is the scan-repeat axis); "lengths" carries it on axis 0 —
+# the same layout stack_caches produces.
 
 def gather_slots(cache, slot_idx):
     """Device-side gather of a compact sub-cache. slot_idx: (B,) int32.
@@ -254,20 +258,28 @@ def concat_slots(cache, extra):
     return {"stages": stages, "lengths": lengths}
 
 
-def slot_decode_step(params, cfg: ModelConfig, tokens, cache, slot_idx):
+def slot_decode_step(params, cfg: ModelConfig, tokens, cache, slot_idx,
+                     frontend=None):
     """One decode step resident in the slotted cache. tokens: (B, 1);
-    slot_idx: (B,). Rows mapped to the scratch slot are compute padding —
-    their writes land in scratch and are never read."""
-    sub = gather_slots(cache, slot_idx)
-    logits, new_sub, aux = decode_step(params, cfg, tokens, sub)
-    return logits, scatter_slots(cache, new_sub, slot_idx), aux
+    slot_idx: (B,). Writes land in place: only the new token's row of
+    each active slot is touched. Rows mapped to the scratch slot are
+    compute padding — their writes land in scratch and are never read."""
+    positions = jnp.take(cache["lengths"], slot_idx)[:, None]
+    return apply(params, cfg, tokens, positions, cache=cache,
+                 frontend=frontend, write=True, slot_idx=slot_idx)
 
 
-def slot_extend(params, cfg: ModelConfig, tokens, cache, slot_idx):
-    """Commit a (B, G) chain of accepted tokens into the slotted cache."""
-    sub = gather_slots(cache, slot_idx)
-    logits, new_sub, aux = extend(params, cfg, tokens, sub)
-    return logits, scatter_slots(cache, new_sub, slot_idx), aux
+def slot_extend(params, cfg: ModelConfig, tokens, cache, slot_idx,
+                frontend=None):
+    """Commit a (B, G) chain of accepted tokens into the slotted cache —
+    in place: G rows per active slot, never the full sub-cache. frontend
+    (modality embeddings) refreshes cross-attention rows for the active
+    slots (prefill)."""
+    G = tokens.shape[1]
+    positions = (jnp.take(cache["lengths"], slot_idx)[:, None]
+                 + jnp.arange(G, dtype=jnp.int32))
+    return apply(params, cfg, tokens, positions, cache=cache,
+                 frontend=frontend, write=True, slot_idx=slot_idx)
 
 
 def slot_verify_chunk(params, cfg: ModelConfig, tokens, cache, slot_idx,
@@ -276,19 +288,23 @@ def slot_verify_chunk(params, cfg: ModelConfig, tokens, cache, slot_idx,
 
     rel_pos: (B, G) node depths relative to each slot's length — absolute
     positions are resolved on device, so no host read of lengths."""
-    sub = gather_slots(cache, slot_idx)
-    positions = sub["lengths"][:, None] + rel_pos
-    logits, _, _ = verify_chunk(params, cfg, tokens, sub,
-                                positions=positions, seg_mask=seg_mask,
-                                write=False)
+    positions = jnp.take(cache["lengths"], slot_idx)[:, None] + rel_pos
+    logits, _, _ = apply(params, cfg, tokens, positions, cache=cache,
+                         seg_mask=seg_mask, write=False, slot_idx=slot_idx)
     return logits
 
 
 # ====================================================== apply
 
 def _apply_sublayer(spec: LayerSpec, p, cache, x, positions, cfg: ModelConfig,
-                    *, seg_mask, write, kv_src, causal=True):
-    """Returns (x, new_cache, aux)."""
+                    *, seg_mask, write, kv_src, causal=True, slot_idx=None):
+    """Returns (x, new_cache, aux). With slot_idx, `cache` is a resident
+    slot pool (batch axis > B): mixers gather the active rows for reads
+    and `new_cache` holds sub-sized *write deltas* (new KV rows / fresh
+    recurrent states) instead of updated pool arrays — so the enclosing
+    lax.scan stacks only new-token-sized outputs, and `apply` scatters
+    the deltas into the donated resident cache once, at the top level of
+    the jitted program."""
     aux = jnp.zeros((), jnp.float32)
     window = 0 if spec.mixer == "ssm" else effective_window(cfg)
     h = apply_norm(p["ln1"], x, cfg)
@@ -297,29 +313,38 @@ def _apply_sublayer(spec: LayerSpec, p, cache, x, positions, cfg: ModelConfig,
         if causal:
             out, new_self = attn.gqa_attention(
                 p["mixer"], cfg, h, positions, cache=self_cache,
-                seg_mask=seg_mask, window=window)
+                seg_mask=seg_mask, window=window, slot_idx=slot_idx,
+                write=write)
         else:  # encoder: bidirectional, no rope
             out, new_self = _bidir_attention(p["mixer"], cfg, h)
     elif spec.mixer == "mla":
         out, new_self = attn.mla_attention(
             p["mixer"], cfg, h, positions, cache=self_cache,
-            seg_mask=seg_mask, window=window)
+            seg_mask=seg_mask, window=window, slot_idx=slot_idx, write=write)
     else:  # ssm
-        out, new_self = ssm_mod.ssm_mixer(p["mixer"], cfg, h, state=self_cache)
+        out, new_self = ssm_mod.ssm_mixer(p["mixer"], cfg, h,
+                                          state=self_cache,
+                                          slot_idx=slot_idx, write=write)
     if not write:
-        new_self = self_cache
+        new_self = self_cache if slot_idx is None else None
     x = (x + out).astype(x.dtype)
 
-    new_cache = dict(cache) if cache is not None else None
-    if new_cache is not None:
-        new_cache["self"] = new_self if new_self is not None else self_cache
+    if slot_idx is not None:
+        new_cache = {"self": new_self} if cache is not None else None
+    else:
+        new_cache = dict(cache) if cache is not None else None
+        if new_cache is not None:
+            new_cache["self"] = new_self if new_self is not None \
+                else self_cache
 
     if spec.cross:
         h = apply_norm(p["ln_cross"], x, cfg)
         cross_cache = cache.get("cross") if cache is not None else None
         use_src = kv_src if (cross_cache is None or kv_src is not None) else None
         out, new_cross = attn.cross_attention(p["cross"], cfg, h,
-                                              kv_src=use_src, cache=cross_cache)
+                                              kv_src=use_src,
+                                              cache=cross_cache,
+                                              slot_idx=slot_idx, write=write)
         x = (x + out).astype(x.dtype)
         if new_cache is not None:
             new_cache["cross"] = new_cross
@@ -352,8 +377,42 @@ def _bidir_attention(p, cfg: ModelConfig, h):
     return out.reshape(B, T, hq * hd) @ p["wo"], None
 
 
+def _scatter_stage_delta(scache, deltas, slot_idx, positions):
+    """Scatter one stage's stacked write deltas into the resident pool.
+
+    scache: per-sublayer tuple of cache dicts with leading (reps, pool,
+    ...); deltas: matching tuple of {"self"/"cross": delta | None} where
+    a delta carries leading (reps, B, ...). Runs at the top level of the
+    jitted step (outside the scan), so with buffer donation XLA updates
+    the pool in place and per-step written bytes scale with the number
+    of new tokens. Duplicate scratch rows resolve arbitrarily — scratch
+    contents are never read."""
+    bidx = slot_idx[:, None]
+    out = []
+    for cj, dj in zip(scache, deltas):
+        nc = dict(cj)
+        for key, pool_c in cj.items():
+            d = dj.get(key) if dj is not None else None
+            if d is None:
+                continue
+            if "ssm" in d:          # recurrent state: per-slot replacement
+                nc[key] = {f: pool_c[f].at[:, slot_idx].set(d[f])
+                           for f in pool_c}
+            else:                   # attention KV: new-token rows
+                C = pool_c["slot_pos"].shape[-1]
+                if key == "cross":  # full-row projections, columns 0..S
+                    scol = jnp.arange(d["slot_pos"].shape[-1])[None, :]
+                else:               # ring placement, as in write_kv
+                    scol = positions % C
+                nc[key] = {f: pool_c[f].at[:, bidx, scol].set(d[f])
+                           for f in pool_c}
+        out.append(nc)
+    return tuple(out)
+
+
 def _apply_stage(pattern, sparams, scache, x, positions, cfg: ModelConfig,
-                 *, seg_mask, write, kv_src, causal=True, remat=False):
+                 *, seg_mask, write, kv_src, causal=True, remat=False,
+                 slot_idx=None):
     def body(carry, xs):
         xx = carry
         lp, lc = xs
@@ -363,7 +422,8 @@ def _apply_stage(pattern, sparams, scache, x, positions, cfg: ModelConfig,
             cj = lc[j] if lc is not None else None
             xx, ncj, aux = _apply_sublayer(
                 spec, lp[j], cj, xx, positions, cfg,
-                seg_mask=seg_mask, write=write, kv_src=kv_src, causal=causal)
+                seg_mask=seg_mask, write=write, kv_src=kv_src, causal=causal,
+                slot_idx=slot_idx)
             new_lc.append(ncj)
             aux_tot = aux_tot + aux
         return xx, (tuple(new_lc), aux_tot)
@@ -399,7 +459,7 @@ def _logits(params, cfg: ModelConfig, x):
 
 def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
           frontend=None, seg_mask=None, write=True, remat=False,
-          return_hidden=False):
+          return_hidden=False, slot_idx=None):
     """Unified forward.
 
     tokens:    (B, T) int32
@@ -408,6 +468,12 @@ def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
     frontend:  (B, S, d) stub modality embeddings (audio/vlm)
     seg_mask:  (B, T, T) intra-segment mask (tree verification)
     write:     commit new KV/state into the returned cache
+    slot_idx:  (B,) int32 — `cache` is a resident slot pool whose batch
+               axis exceeds B; row b of tokens lives in pool slot
+               slot_idx[b]. Writes touch only the new tokens' rows of the
+               active slots (paged-attention-style in-place update);
+               reads gather the active rows. The returned cache is the
+               full pool.
     Returns (logits (B,T,Vp) f32, new_cache, aux_loss) [+ hidden if asked].
     """
     B, T = tokens.shape
@@ -433,7 +499,14 @@ def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
                                                 cache_stages):
         x, ncache, aux = _apply_stage(
             pattern, sparams, scache, x, positions, cfg,
-            seg_mask=seg_mask, write=write, kv_src=kv_src, remat=remat)
+            seg_mask=seg_mask, write=write, kv_src=kv_src, remat=remat,
+            slot_idx=slot_idx)
+        if slot_idx is not None and cache is not None:
+            # resident path: the scan produced write deltas; scatter them
+            # into the pool here (top level, donated buffers)
+            ncache = (_scatter_stage_delta(scache, ncache, slot_idx,
+                                           positions)
+                      if write else scache)
         new_stages.append(ncache)
         aux_total = aux_total + aux
 
@@ -444,7 +517,12 @@ def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
     if cache is not None:
         new_len = cache["lengths"]
         if write:
-            new_len = jnp.maximum(new_len, positions[:, -1] + 1)
+            if slot_idx is None:
+                new_len = jnp.maximum(new_len, positions[:, -1] + 1)
+            else:
+                upd = jnp.maximum(jnp.take(new_len, slot_idx),
+                                  positions[:, -1] + 1)
+                new_len = new_len.at[slot_idx].set(upd)
         new_cache = {"stages": new_stages, "lengths": new_len}
     if return_hidden:
         return logits, new_cache, aux_total, x

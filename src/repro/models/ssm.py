@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig, SSMConfig
+from repro.models.attention import take_rows
 from repro.models.layers import dense_init
 
 
@@ -174,10 +175,18 @@ def _gated_rmsnorm(y, z, scale, eps):
     return (y * jax.lax.rsqrt(ms + eps) * scale).astype(dt_)
 
 
-def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False):
+def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False,
+              slot_idx=None, write=True):
     """Full-sequence (state=None or carried) SSD mixer.
 
     x: (B, L, d_model). Returns (out, new_state or None).
+
+    slot_idx: (B,) — `state` is a resident slot pool (batch axis larger
+    than B); row b of x advances pool slot slot_idx[b]. Reads gather the
+    B active rows; the returned new_state is then a sub-sized *write
+    delta* the caller scatters into the pool at the top of the jitted
+    step. write=False scores without committing the recurrent state
+    (returns new_state=None).
     """
     s = cfg.ssm
     D = cfg.d_model
@@ -185,10 +194,12 @@ def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False):
     G, N = s.n_groups, s.d_state
     B_, L, _ = x.shape
 
+    st = take_rows(state, slot_idx) if state is not None else None
+
     z, xbc, dt = _split_in_proj(x @ p["in_proj"], cfg)
-    if state is not None:
+    if st is not None:
         # prepend conv history
-        hist = state["conv"].astype(xbc.dtype)
+        hist = st["conv"].astype(xbc.dtype)
         xbc_ext = jnp.concatenate([hist, xbc], axis=1)
         conv_out = _causal_conv(xbc_ext, p["conv_w"], p["conv_b"])[:, hist.shape[1]:]
         new_conv = xbc_ext[:, -(s.d_conv - 1):, :] if s.d_conv > 1 else hist
@@ -203,7 +214,7 @@ def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False):
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
     A = -jnp.exp(p["A_log"])
 
-    init = state["ssm"] if state is not None else None
+    init = st["ssm"] if st is not None else None
     if use_kernel:
         from repro.kernels.ssd_scan import ops as ssd_ops
         y, s_final = ssd_ops.ssd(xs, dt, A, Bmat, Cmat, s.chunk_size, init)
@@ -215,7 +226,9 @@ def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False):
     out = y @ p["out_proj"]
 
     new_state = None
-    if state is not None:
-        new_state = {"ssm": s_final, "conv": new_conv.astype(state["conv"].dtype),
-                     "pos": state["pos"] + L}
+    if state is not None and write:
+        new_state = {"ssm": (s_final if slot_idx is None
+                             else s_final.astype(state["ssm"].dtype)),
+                     "conv": new_conv.astype(state["conv"].dtype),
+                     "pos": st["pos"] + L}
     return out, new_state

@@ -77,6 +77,9 @@ class IterationRecord:
     verify_start_ms: float = 0.0
     verify_ms: float = 0.0
     verify_idle_ms: float = 0.0          # bubble before this verification
+    prefill_ms: float = 0.0              # prompt forwards charged to the
+    #                                      verify stage this iteration
+    #                                      (pipelined strategies only)
     queue_depth: int = 0                 # drafted cohorts waiting at commit
     n_invalidated: int = 0               # draft-ahead entries rejected
 
@@ -103,7 +106,13 @@ class ServeStats:
     # --- pipeline health (DESIGN.md §2.2) ---
     @property
     def verifier_busy_ms(self) -> float:
-        return sum(r.verify_ms for r in self.records)
+        """Verification + prefill forwards: everything occupying the
+        verification server (matches the executor's verify StageClock)."""
+        return sum(r.verify_ms + r.prefill_ms for r in self.records)
+
+    @property
+    def prefill_busy_ms(self) -> float:
+        return sum(r.prefill_ms for r in self.records)
 
     @property
     def verifier_idle_ms(self) -> float:

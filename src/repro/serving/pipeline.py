@@ -33,9 +33,12 @@ Timing semantics (DESIGN.md §2.2): draft->verify transfers pay
 `comm_ms`; verification outcomes stream back to the central node with
 the commit decision, so a redraft may begin at the verification's end
 time (the return path overlaps the verification tail — sub-ms token
-payloads). Verifier idle (bubble) time, queueing, and stage occupancy
-are all *measured* off the event timeline; nothing here consults the
-analytic `iteration_pipelined` formula.
+payloads). A cold request's prompt forward is a *prefill job on the
+verify stage* (`LatencyModel.t_prefill`) that gates its first draft, so
+TTFT includes the cold-start prefill under bursty arrivals. Verifier
+idle (bubble) time, queueing, and stage occupancy are all *measured*
+off the event timeline; nothing here consults the analytic
+`iteration_pipelined` formula.
 """
 from __future__ import annotations
 
@@ -71,15 +74,24 @@ class PipelineExecutor:
         self.busy_ema = 1.0
         self.n_survived = 0
         self.n_invalidated = 0
+        # prefill time scheduled on the verify stage since the last
+        # IterationRecord (attributed to the record that observes it)
+        self._prefill_acc_ms = 0.0
+        # verify free time *before* the in-flight verification was placed
+        # (step() schedules the verification before spawning the ahead
+        # cohort, so prefills queue behind it; the queue-depth observation
+        # must still compare against the pre-verification free time)
+        self._vfree_before = 0.0
 
     # --------------------------------------------------------------- state
     def observation(self, backlog: int = 0,
                     waiting: Optional[DraftJob] = None) -> PipelineObservation:
         """`waiting` is a drafted cohort not yet picked up by the server;
         it counts as queue depth only if it reached the server before the
-        server freed up (i.e. it is genuinely sitting in the queue)."""
+        server freed up from the *previous* verification (i.e. it is
+        genuinely sitting in the queue)."""
         queued = 1 if (waiting is not None
-                       and waiting.ready_ms < self.verify.free_ms) else 0
+                       and waiting.ready_ms < self._vfree_before) else 0
         return PipelineObservation(
             verify_busy_frac=self.verify.busy_frac(),
             draft_busy_frac=self.draft.busy_frac(),
@@ -126,6 +138,17 @@ class PipelineExecutor:
         if not cands:
             return None
         for r in cands:
+            if r.rid not in eng.entry_logits:
+                # cold request: the prompt forward occupies the
+                # verification server and gates drafting, so TTFT is
+                # honest under bursty arrivals (no free prefills)
+                t_pf = eng.lat.t_prefill(r.context_len)
+                self.verify.park(avail(r))   # arrival lull != bubble
+                _, pend, _ = self.verify.schedule(
+                    t_pf, not_before_ms=avail(r), kind="prefill",
+                    rids=(r.rid,))
+                eng.avail_ms[r.rid] = pend
+                self._prefill_acc_ms += t_pf
             eng._ensure_prefilled(r)
         extra = {r.rid: opt_ext(r) for r in cands if r.rid in inflight}
         batch, gammas = eng._plan_cohort(
@@ -144,7 +167,10 @@ class PipelineExecutor:
         n_active = eng.n_active(entries)
         t_draft = eng.lat.t_ssm(b, l, K, n_active)
         rids = tuple(r.rid for r in batch)
-        start, end, _ = self.draft.schedule(t_draft, not_before_ms=t_vis,
+        # drafting cannot start before every cold member's prefill landed
+        gate = max([t_vis] + [avail(r) for r in batch
+                              if r.rid not in inflight])
+        start, end, _ = self.draft.schedule(t_draft, not_before_ms=gate,
                                             kind="draft", rids=rids)
         return DraftJob(entries, start, t_draft, end + eng.lat.comm_ms,
                         n_active)
@@ -215,10 +241,10 @@ class PipelineExecutor:
             if job is None:
                 return None
 
-        # draft-ahead for the next iteration, concurrent with this verify
-        ahead = self._spawn_job(job)
-
         # ---- verification ----
+        # scheduled *before* the ahead cohort is spawned: new arrivals'
+        # prefill jobs then queue behind this already-ready verification
+        # instead of preempting it, and its bubble is measured honestly
         batch = [e.req for e in job.entries]
         b = len(batch)
         l = max(r.context_len for r in batch)
@@ -232,6 +258,10 @@ class PipelineExecutor:
         vstart, vend, bubble = self.verify.schedule(
             t_llm, not_before_ms=job.ready_ms, kind="verify",
             rids=tuple(r.rid for r in batch))
+        self._vfree_before = vfree0
+
+        # draft-ahead for the next iteration, concurrent with this verify
+        ahead = self._spawn_job(job)
         committed, total_committed = eng._verify_commit(job.entries)
 
         # measured occupancy: wait>0 means the cohort queued at the server
@@ -251,7 +281,9 @@ class PipelineExecutor:
             n_active_drafters=job.n_active,
             draft_start_ms=job.draft_start_ms, draft_ms=job.draft_ms,
             verify_start_ms=vstart, verify_ms=t_llm,
-            verify_idle_ms=bubble, queue_depth=queue_depth)
+            verify_idle_ms=bubble, prefill_ms=self._prefill_acc_ms,
+            queue_depth=queue_depth)
+        self._prefill_acc_ms = 0.0
         eng._finalize(batch, committed, rec)
 
         # Alg. 2 adaptive control driven by *observed* occupancy

@@ -5,13 +5,16 @@ shape-bucketed step functions.
 Slot model (continuous batching): the runner preallocates ONE cache
 pytree whose batch axis is a pool of request *slots*. Requests are
 admitted into free slots at prefill and evicted on completion; every
-batched step gathers its active slots into a compact sub-cache,
-computes, and scatters results back — all inside a single jitted program
-(`model.slot_decode_step` / `slot_verify_chunk` / `slot_extend`), so no
-host-side pytree reassembly (`stack_caches`/`split_cache`) happens per
-step. Active-slot counts are padded to buckets to bound recompiles;
-padded rows are mapped to a dedicated scratch slot (index 0) that no
-request ever owns, so their garbage writes are never read.
+batched step passes its active slot indices into the model's write path
+(`model.slot_decode_step` / `slot_verify_chunk` / `slot_extend` →
+`apply(..., slot_idx=...)`), which scatters only the new tokens' rows
+into the resident cache in place (paged-attention style) and gathers
+only the active rows for attention/SSM reads — per-step cache byte
+traffic scales with the number of new tokens, not bucket x capacity,
+and no host-side pytree reassembly (`stack_caches`/`split_cache`)
+happens per step. Active-slot counts are padded to buckets to bound
+recompiles; padded rows are mapped to a dedicated scratch slot (index 0)
+that no request ever owns, so their garbage writes are never read.
 
 Speculative rollback is snapshot-based: drafting gathers a compact
 sub-cache once (`speculative_caches`, a device-side copy) and decodes on
@@ -30,16 +33,20 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.models import model as M
 
-PREFILL_BUCKETS = (8, 16, 32, 64, 128, 256, 512, 1024)
+# small buckets (1, 2, 4) keep short prompts to O(log P) chunks instead
+# of token-at-a-time decode steps
+PREFILL_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
 SLOT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 
 def slot_bucket(n: int) -> int:
-    """Smallest bucket >= n (bounds the number of compiled batch shapes)."""
+    """Smallest bucket >= n (bounds the number of compiled batch shapes).
+    Past the enumerated buckets, clamp to the next power of two — one
+    compile per doubling, never one per active-batch size."""
     for b in SLOT_BUCKETS:
         if b >= n:
             return b
-    return n
+    return 1 << (n - 1).bit_length()
 
 
 # Module-level jitted steps with cfg static: every ModelRunner with the

@@ -4,8 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_slots)
+from repro.kernels.decode_attention.ref import (decode_attention_ref,
+                                                decode_attention_slots_ref)
 from repro.kernels.ssd_scan.ops import ssd
 from repro.kernels.ssd_scan.ref import ssd_reference
 from repro.kernels.tree_attention.ops import tree_attention
@@ -70,6 +72,34 @@ def test_decode_attention_matches_ref(case):
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("case", DECODE_CASES[:3])
+def test_decode_attention_slots_matches_ref(case):
+    """Slot-indexed reads: a pool larger than the active batch, rows
+    selected by slot_idx (incl. a repeated scratch row), must match both
+    the slot-aware oracle and plain decode on pre-gathered rows."""
+    B, H, G, S, D, window, dtype = case
+    pool = B + 3
+    q = _r(1, (B, H, G, D), dtype)
+    kc, vc = _r(2, (pool, H, S, D), dtype), _r(3, (pool, H, S, D), dtype)
+    cp = jnp.broadcast_to(jnp.arange(S), (pool, S)).astype(jnp.int32)
+    cp = jnp.where(cp < S - 3, cp, -1)
+    qp = jnp.full((B,), S - 3, jnp.int32)
+    # active rows scattered through the pool; row 0 acts as scratch
+    slot_idx = (jnp.arange(B, dtype=jnp.int32) * 2 + 1) % pool
+    out = decode_attention_slots(q, kc, vc, cp, qp, slot_idx, scale=0.2,
+                                 window=window, interpret=True, block_k=32)
+    ref = decode_attention_slots_ref(q, kc, vc, cp, qp, slot_idx, scale=0.2,
+                                     window=window)
+    gathered = decode_attention(
+        q, jnp.take(kc, slot_idx, axis=0), jnp.take(vc, slot_idx, axis=0),
+        jnp.take(cp, slot_idx, axis=0), qp, scale=0.2, window=window,
+        interpret=True, block_k=32)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(gathered))
 
 
 SSD_CASES = [

@@ -225,10 +225,54 @@ def test_pipelined_latency_close_to_analytic_formula(models):
         eng.submit(p, max_new_tokens=8)
     stats = eng.run()
     formula = sum(max(rec.draft_ms + eng.lat.comm_ms, rec.verify_ms)
-                  for rec in stats.records)
+                  for rec in stats.records) + stats.prefill_busy_ms
     assert stats.sim_ms <= formula * 1.30
     # and it can never beat the coupled accounting's own stage sum
     assert stats.sim_ms >= max(rec.verify_ms for rec in stats.records)
+
+
+@pytest.mark.parametrize("strategy", ["cosine", "pipeinfer"])
+def test_pipelined_ttft_includes_prefill(models, strategy):
+    """Cold-start honesty: the prompt forward is a verify-stage job, so
+    no pipelined request can see its first token before its prefill has
+    been paid (the seed charged zero time for prefill)."""
+    eng = _engine(models, "attn", strategy)
+    p = _prompts(1, rng_seed=41, length=24)[0]
+    eng.submit(p, max_new_tokens=4)
+    stats = eng.run()
+    r = eng.pool.completed[0]
+    t_pf = eng.lat.t_prefill(len(p))
+    assert r.first_token_ms >= t_pf
+    kinds = [ev.kind for ev in eng.executor.log.events]
+    assert "prefill_start" in kinds and "prefill_end" in kinds
+    # prefill time lands in the records and in the verify-stage busy sum
+    assert stats.prefill_busy_ms >= t_pf - 1e-9
+    assert abs(eng.executor.verify.busy_ms - stats.verifier_busy_ms) < 1e-6
+    # a prefill event never starts before the request's arrival
+    starts = [ev for ev in eng.executor.log.events
+              if ev.kind == "prefill_start"]
+    assert all(ev.t_ms >= 0.0 for ev in starts)
+
+
+def test_bursty_arrivals_queue_prefills_on_verify_stage(models):
+    """Two simultaneous cold arrivals: their prefills serialize on the
+    verification server, so the second request's first draft cannot
+    start before both prompt forwards are done."""
+    eng = _engine(models, "attn", "pipeinfer")
+    for p in _prompts(2, rng_seed=43, length=16):
+        eng.submit(p, max_new_tokens=4)
+    eng.run()
+    evs = eng.executor.log.events
+    pf = [(ev.t_ms, ev.kind) for ev in evs if ev.kind.startswith("prefill")]
+    assert len([k for _, k in pf if k == "prefill_start"]) == 2
+    # serialized: second prefill starts at/after the first one ends
+    ends = sorted(t for t, k in pf if k == "prefill_end")
+    starts = sorted(t for t, k in pf if k == "prefill_start")
+    assert starts[1] >= ends[0] - 1e-9
+    # drafting that includes both requests begins after the last prefill
+    d0 = min(ev.t_ms for ev in evs if ev.kind == "draft_start"
+             and len(ev.rids) == 2)
+    assert d0 >= ends[1] - 1e-9
 
 
 def test_single_token_prompt_keeps_one_behind_invariant(models):

@@ -142,6 +142,167 @@ def test_speculative_snapshot_is_rollback(pair):
     np.testing.assert_allclose(lg_s[0], ref.decode(0, step), atol=ATOL)
 
 
+def test_inplace_write_path_matches_gather_scatter(pair):
+    """The resident write path (apply(..., slot_idx=...)) must be
+    bit-identical to the legacy gather -> step -> scatter composition:
+    same logits, same active-slot cache contents — across attention, SSM
+    and hybrid families, including bucket padding to the scratch slot."""
+    runner, _, cfg = pair
+    params = runner.params
+    rng = np.random.default_rng(7)
+    rids = [0, 1, 2]
+    for rid in rids:                       # third admission grows the pool
+        runner.prefill_request(rid, rng.integers(0, cfg.vocab, 6 + rid))
+    idx = runner.slots.padded_idx(rids)    # pads 3 -> 4 with scratch
+    rows = int(idx.shape[0])
+    cache = runner.slots.cache
+
+    def active(c):
+        """Cache contents of the active slots only (scratch excluded)."""
+        act = jnp.asarray(sorted({int(s) for s in np.asarray(idx)
+                                  if s != SlotCacheManager.SCRATCH}))
+        stages = jax.tree.map(lambda x: jnp.take(x, act, axis=1),
+                              c["stages"])
+        return stages, jnp.take(c["lengths"], act)
+
+    def assert_same(ca, cb):
+        for a, b in zip(jax.tree.leaves(active(ca)),
+                        jax.tree.leaves(active(cb))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # --- decode ---
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (rows, 1)), jnp.int32)
+    lg_a, cache_a, _ = M.slot_decode_step(params, cfg, toks, cache, idx)
+    sub = M.gather_slots(cache, idx)
+    lg_b, sub, _ = M.decode_step(params, cfg, toks, sub)
+    cache_b = M.scatter_slots(cache, sub, idx)
+    np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_b))
+    assert_same(cache_a, cache_b)
+
+    # --- verify (no commit): logits match, caches untouched ---
+    G = 3
+    vt = jnp.asarray(rng.integers(0, cfg.vocab, (rows, G)), jnp.int32)
+    rel = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32), (rows, G))
+    mask = jnp.broadcast_to(jnp.tril(jnp.ones((G, G), bool)), (rows, G, G))
+    lg_a = M.slot_verify_chunk(params, cfg, vt, cache_a, idx, rel, mask)
+    sub = M.gather_slots(cache_b, idx)
+    lg_b, _, _ = M.verify_chunk(params, cfg, vt, sub,
+                                positions=sub["lengths"][:, None] + rel,
+                                seg_mask=mask, write=False)
+    np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_b))
+    assert_same(cache_a, cache_b)
+
+    # --- extend (speculative commit) ---
+    et = jnp.asarray(rng.integers(0, cfg.vocab, (rows, 2)), jnp.int32)
+    lg_a, cache_a, _ = M.slot_extend(params, cfg, et, cache_a, idx)
+    sub = M.gather_slots(cache_b, idx)
+    lg_b, sub, _ = M.extend(params, cfg, et, sub)
+    cache_b = M.scatter_slots(cache_b, sub, idx)
+    np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_b))
+    assert_same(cache_a, cache_b)
+
+    # --- eviction and slot reuse keep the paths aligned ---
+    runner.slots.cache = cache_a
+    runner.drop(1)
+    runner.prefill_request(9, rng.integers(0, cfg.vocab, 5))
+    idx2 = runner.slots.padded_idx([0, 9])
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 1)), jnp.int32)
+    lg_a, cache_a2, _ = M.slot_decode_step(params, cfg, toks,
+                                           runner.slots.cache, idx2)
+    sub = M.gather_slots(runner.slots.cache, idx2)
+    lg_b, _, _ = M.decode_step(params, cfg, toks, sub)
+    np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_b))
+
+
+def test_inplace_cross_attention_matches_gather_scatter():
+    """Cross-attention layers (VLM-style frontend) through the resident
+    path: prefill-with-frontend writes the projected cross KV rows as a
+    delta into the active slots; decode reads them back — both
+    bit-identical to the gather/scatter composition."""
+    from repro.config import ModelConfig
+    cfg = ModelConfig(name="tiny-cross", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab=50, tie_embeddings=True,
+                      dtype="float32", cross_attn_period=2,
+                      n_frontend_tokens=4)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pool = M.init_cache(cfg, 4, MAX_LEN, dtype=jnp.float32)
+    rng = np.random.default_rng(13)
+    idx = jnp.asarray([1, 3], jnp.int32)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 6)), jnp.int32)
+    fe = jnp.asarray(rng.normal(size=(2, cfg.n_frontend_tokens,
+                                      cfg.d_model)) * 0.1, jnp.float32)
+
+    # prefill with frontend: cross KV rows written in place
+    lg_a, pool_a, _ = M.slot_extend(params, cfg, toks, pool, idx,
+                                    frontend=fe)
+    sub = M.gather_slots(pool, idx)
+    lg_b, sub, _ = M.extend(params, cfg, toks, sub, frontend=fe)
+    pool_b = M.scatter_slots(pool, sub, idx)
+    np.testing.assert_array_equal(np.asarray(lg_a), np.asarray(lg_b))
+
+    # decode without frontend: reads the slot-resident cross cache
+    t2 = jnp.asarray(rng.integers(0, cfg.vocab, (2, 1)), jnp.int32)
+    lg_a2, _, _ = M.slot_decode_step(params, cfg, t2, pool_a, idx)
+    sub = M.gather_slots(pool_b, idx)
+    lg_b2, _, _ = M.decode_step(params, cfg, t2, sub)
+    np.testing.assert_array_equal(np.asarray(lg_a2), np.asarray(lg_b2))
+
+
+def test_speculative_snapshot_rollback_after_inplace_steps(pair):
+    """Snapshots taken from a cache advanced by in-place writes must
+    still be pure copies: drafting on them never leaks into the resident
+    cache, and discarding them is a complete rollback."""
+    runner, ref, cfg = pair
+    rng = np.random.default_rng(11)
+    toks = rng.integers(0, cfg.vocab, 7)
+    runner.prefill_request(0, toks)
+    ref.prefill(0, toks)
+    # advance the resident cache in place, then snapshot
+    step = int(rng.integers(0, cfg.vocab))
+    runner.decode([0], np.asarray([step]))
+    ref.decode(0, step)
+    snap = runner.speculative_caches([0])
+    for t in rng.integers(0, cfg.vocab, 3):
+        _, snap = runner.decode([0], np.asarray([t]), caches=snap)
+    assert runner.length(0) == len(toks) + 1
+    nxt = int(rng.integers(0, cfg.vocab))
+    lg, _ = runner.decode([0], np.asarray([nxt]))
+    np.testing.assert_allclose(lg[0], ref.decode(0, nxt), atol=ATOL)
+
+
+def test_short_prompt_prefill_uses_small_buckets():
+    """A 7-token prompt must prefill as 4+2+1 bucketed chunks, not seven
+    single-token steps (PREFILL_BUCKETS starts at 1 now)."""
+    cfg = _tiny("attn")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    runner = ModelRunner(cfg, params, max_len=MAX_LEN)
+    calls = []
+    orig_e, orig_d = runner._jit_slot_extend, runner._jit_slot_decode
+    runner._jit_slot_extend = lambda *a, **k: (
+        calls.append(int(k["tokens"].shape[1])) or orig_e(*a, **k))
+    runner._jit_slot_decode = lambda *a, **k: (
+        calls.append(1) or orig_d(*a, **k))
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, cfg.vocab, 7)
+    lg, _ = runner.prefill_request(0, toks)
+    assert calls == [4, 2, 1]
+    ref = PerRequestReference(cfg, params)
+    np.testing.assert_allclose(lg, ref.prefill(0, toks), atol=ATOL)
+    assert runner.length(0) == 7
+
+
+def test_slot_bucket_clamps_to_pow2():
+    assert slot_bucket(1) == 1
+    assert slot_bucket(3) == 4
+    assert slot_bucket(256) == 256
+    # past the enumerated buckets: next power of two, not raw n
+    assert slot_bucket(257) == 512
+    assert slot_bucket(300) == 512
+    assert slot_bucket(512) == 512
+    assert slot_bucket(513) == 1024
+
+
 def test_slot_pool_growth_and_buckets():
     cfg = _tiny("attn")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
