@@ -1,0 +1,148 @@
+"""CI bench-regression gate: compare a fresh benchmark JSON against the
+checked-in baseline with per-metric tolerances.
+
+  python -m benchmarks.check_regression \\
+      --fresh BENCH_fresh.json --baseline BENCH_online_serving.json
+
+Gated metrics (simulated-deployment numbers, deterministic given the
+trained fixture -- wall-clock metrics like us_per_call/wall_us_per_iter
+are runner-dependent noise and are reported but never gated):
+
+  * ms_per_tok -- throughput proxy: fail if it rises more than 15%
+  * vutil      -- verifier utilization: fail if it drops more than 15%
+
+A row present in the baseline but missing from the fresh run (or present
+but ERROR) fails the gate: lost coverage is a regression too. New rows
+(e.g. freshly added sweep columns) are reported and pass.
+
+Exit status: 0 = gate passes, 1 = regression (a readable delta table is
+printed either way).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# metric -> (direction, relative tolerance); direction "up" means larger
+# values are worse (gate on increases), "down" means smaller are worse
+GATES = {
+    "ms_per_tok": ("up", 0.15),
+    "vutil": ("down", 0.15),
+}
+# reported in the delta table but never gated (noisy or informational)
+REPORT_ONLY = (
+    "p95",
+    "ttft_ms",
+    "bubble_ms",
+    "invalidated",
+    "side",
+    "dropped",
+)
+ROW_FMT = "{:<36} {:<12} {:>10} {:>10} {:>8}  {}"
+
+
+def parse_derived(derived: str) -> dict:
+    """'k=v;k=v' -> {k: float} (non-numeric values are skipped)."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = float(v)
+        except ValueError:
+            continue
+    return out
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    rows = {}
+    for r in data.get("rows", []):
+        derived = str(r.get("derived", ""))
+        rows[r["name"]] = {"derived": derived, "metrics": parse_derived(derived)}
+    return rows
+
+
+def compare(fresh: dict, base: dict, prefix: str):
+    """Returns (table_lines, failure_messages, new_row_names)."""
+    failures = []
+    lines = [ROW_FMT.format("row", "metric", "base", "fresh", "delta", "verdict")]
+    lines.append("-" * len(lines[0]))
+    for name, brow in sorted(base.items()):
+        if not name.startswith(prefix):
+            continue
+        if brow["derived"].startswith("ERROR"):
+            # an ERROR baseline row would silently skip every metric:
+            # refuse it so a broken artifact can't become the baseline
+            failures.append(f"{name}: baseline row is ERROR -- refresh it from a clean run")
+            lines.append(ROW_FMT.format(name, "-", "-", "-", "-", "FAIL (bad baseline)"))
+            continue
+        frow = fresh.get(name)
+        if frow is None:
+            failures.append(f"{name}: missing from fresh run")
+            lines.append(ROW_FMT.format(name, "-", "-", "-", "-", "FAIL (missing)"))
+            continue
+        if frow["derived"].startswith("ERROR"):
+            failures.append(f"{name}: {frow['derived']}")
+            lines.append(ROW_FMT.format(name, "-", "-", "-", "-", "FAIL (error)"))
+            continue
+        for metric in list(GATES) + list(REPORT_ONLY):
+            bv = brow["metrics"].get(metric)
+            fv = frow["metrics"].get(metric)
+            if metric in GATES and bv is not None and fv is None:
+                # the baseline gates this metric but the fresh run no
+                # longer reports it -- silently skipping would disable
+                # the gate (lost coverage is a regression)
+                failures.append(f"{name}.{metric}: missing from fresh row")
+                row = ROW_FMT.format(name, metric, f"{bv:.3f}", "-", "-", "FAIL (missing)")
+                lines.append(row)
+                continue
+            if bv is None or fv is None:
+                continue
+            delta = (fv - bv) / bv if bv else 0.0
+            verdict = "ok"
+            if metric in GATES:
+                direction, tol = GATES[metric]
+                bad = delta > tol if direction == "up" else delta < -tol
+                if bad:
+                    verdict = f"FAIL (>{tol:.0%})"
+                    msg = f"{bv:.3f} -> {fv:.3f} ({delta:+.1%}, tolerance {tol:.0%})"
+                    failures.append(f"{name}.{metric}: {msg}")
+            row = ROW_FMT.format(name, metric, f"{bv:.3f}", f"{fv:.3f}", f"{delta:+.1%}", verdict)
+            lines.append(row)
+    new_rows = sorted(n for n in fresh if n not in base and n.startswith(prefix))
+    return lines, failures, new_rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True, help="benchmark JSON from this run")
+    ap.add_argument("--baseline", required=True, help="checked-in baseline JSON")
+    ap.add_argument(
+        "--prefix",
+        default="fig7",
+        help="only gate rows with this name prefix (kernel wall-times are machine noise)",
+    )
+    args = ap.parse_args(argv)
+
+    fresh = load_rows(args.fresh)
+    base = load_rows(args.baseline)
+    lines, failures, new_rows = compare(fresh, base, args.prefix)
+    print("\n".join(lines))
+    if new_rows:
+        print(f"\nnew rows (not in baseline, not gated): {', '.join(new_rows)}")
+    if failures:
+        print(f"\nBENCH REGRESSION GATE FAILED ({len(failures)} violation(s)):", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,9 +10,8 @@ from __future__ import annotations
 import os
 import time
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import List, Tuple
 
-import numpy as np
 
 from repro.checkpoint.store import load_checkpoint, save_checkpoint
 from repro.config import CoSineConfig, ModelConfig
@@ -34,7 +33,7 @@ class Fixture:
 
     def engine(self, strategy: str, cosine: CoSineConfig | None = None,
                n_drafters: int | None = None, seed: int = 0, max_len: int = 512,
-               drafters_override=None, **cos_kw):
+               drafters_override=None, drafter_profiles=None, **cos_kw):
         from repro.serving.engine import SpeculativeEngine
         drafters = (drafters_override if drafters_override is not None
                     else self.drafters[: (n_drafters or len(self.drafters))])
@@ -42,7 +41,8 @@ class Fixture:
             n_drafters=len(drafters), draft_len=5, drafters_per_request=2,
             tree_width=2, **cos_kw)
         return SpeculativeEngine(self.target, drafters, cos,
-                                 strategy=strategy, max_len=max_len, seed=seed)
+                                 strategy=strategy, max_len=max_len, seed=seed,
+                                 drafter_profiles=drafter_profiles)
 
 
 def build_fixture(steps_target: int = 500, steps_drafter: int = 300,

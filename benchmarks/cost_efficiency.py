@@ -5,9 +5,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
-from repro.core.latency_model import LatencyModel
 from benchmarks.online_serving import make_arrivals
 
 

@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
@@ -50,7 +49,6 @@ def run(fixture, n_iters: int = 20):
 
     d0 = fixture.drafters[0]
     from repro.serving.runner import ModelRunner
-    import jax
     drafter = ModelRunner(dcfg, d0[1], 128)
     target = ModelRunner(tcfg, tparams, 128)
     ctx = fixture.corpus.sample("piqa", 32)

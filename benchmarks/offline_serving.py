@@ -5,7 +5,6 @@ from __future__ import annotations
 
 import time
 
-from repro.config import CoSineConfig
 
 STRATS = ("ar", "vanilla", "specinfer", "pipeinfer", "cosine")
 

@@ -1,22 +1,29 @@
 """Fig. 7: online serving latency under low / high / volatile Poisson
-request arrival rates, CoSine vs baselines.
+request arrival rates, CoSine vs baselines — plus the heterogeneous
+drafter-cluster straggler sweep (DESIGN.md §2.4).
 
 Besides the latency/TTFT columns, each row reports the pipeline-health
 numbers measured by the discrete-event executor (DESIGN.md §2.2):
-verifier utilization (busy over busy+bubble), total bubble ms, and
-draft-ahead invalidation count. For the coupled baselines the bubble is
-the full draft+comm phase every iteration, so the pipelined strategies'
-measured utilization exceeding them is the paper's overlap made
-*emergent* rather than assumed.
+verifier utilization (busy over busy+bubble), total bubble ms,
+draft-ahead invalidation count, and — for pipelined strategies — the
+per-drafter-node utilizations measured off each node's stage clock.
+
+The straggler sweep runs cosine on a cluster where one node is slowed by
+a factor (2x, 4x): the cut-loose policy keeps the verifier fed, so
+cosine's bubble time should stay below the homogeneous-cluster pipeinfer
+baseline row even with the slow node.
 
 `run(fixture, quick=True)` is the CI smoke mode (fewer requests, high +
-volatile arrivals only) used to produce the BENCH_online_serving.json
-artifact."""
+volatile arrivals, 2x sweep only) used to produce the
+BENCH_online_serving.json artifact gated by benchmarks/check_regression.
+"""
 from __future__ import annotations
 
 import time
 
 import numpy as np
+
+from repro.core.latency_model import DrafterProfile
 
 
 def make_arrivals(mode: str, n: int, seed: int = 0):
@@ -34,8 +41,8 @@ def make_arrivals(mode: str, n: int, seed: int = 0):
 
 
 def serve_online(fixture, strategy: str, mode: str, n_requests: int = 10,
-                 max_new: int = 16):
-    eng = fixture.engine(strategy)
+                 max_new: int = 16, profiles=None):
+    eng = fixture.engine(strategy, drafter_profiles=profiles)
     arr = make_arrivals(mode, n_requests, seed=7)
     for (p, dom), t in zip(fixture.corpus.prompts(n_requests, 16, seed=51),
                            arr):
@@ -53,43 +60,93 @@ def serve_online(fixture, strategy: str, mode: str, n_requests: int = 10,
            for r in eng.pool.completed]
     ttft = [r.first_token_ms - r.arrival_ms for r in eng.pool.completed]
     stats = eng.stats
-    return (float(np.mean(lat)), float(np.percentile(lat, 95)),
-            float(np.mean(ttft)),
-            float(np.median(iter_wall_s)) * 1e6 if iter_wall_s else 0.0,
-            float(stats.verifier_utilization),
-            float(stats.verifier_idle_ms),
-            int(stats.n_invalidated))
+    dutil = dlate = ""
+    n_side = n_dropped = 0
+    if eng.executor is not None:
+        cl = eng.executor.cluster
+        dutil = "|".join(f"{f:.2f}" for f in cl.busy_fracs())
+        dlate = "|".join(str(c) for c in cl.node_late)
+        n_side, n_dropped = cl.n_side, cl.n_dropped
+    return dict(
+        ms_per_tok=float(np.mean(lat)),
+        p95=float(np.percentile(lat, 95)),
+        ttft=float(np.mean(ttft)),
+        wall_iter_us=float(np.median(iter_wall_s)) * 1e6 if iter_wall_s
+        else 0.0,
+        vutil=float(stats.verifier_utilization),
+        bubble_ms=float(stats.verifier_idle_ms),
+        n_invalid=int(stats.n_invalidated),
+        dutil=dutil, dlate=dlate, n_side=n_side, n_dropped=n_dropped)
+
+
+def _fmt(m, extra=""):
+    # wall_us_per_iter: median real host time per engine iteration — the
+    # slot-cache engine's steady-state dispatch cost (the ms_per_tok
+    # numbers are simulated deployment time); vutil/bubble_ms/invalidated
+    # are measured off the executor's event timeline (analytic
+    # decomposition for coupled baselines); dutil is the per-drafter-node
+    # utilization vector, cut/side the straggler-policy outcomes
+    s = (f"ms_per_tok={m['ms_per_tok']:.1f};p95={m['p95']:.1f};"
+         f"ttft_ms={m['ttft']:.0f};"
+         f"wall_us_per_iter={m['wall_iter_us']:.0f};"
+         f"vutil={m['vutil']:.3f};bubble_ms={m['bubble_ms']:.0f};"
+         f"invalidated={m['n_invalid']}")
+    if m["dutil"]:
+        s += (f";dutil={m['dutil']};dlate={m['dlate']};side={m['n_side']};"
+              f"dropped={m['n_dropped']}")
+    return s + extra
+
+
+def _hetero_profiles(n: int, slow_factor: float, slow_node: int = 0):
+    """Homogeneous cluster with one node slowed by `slow_factor`."""
+    return tuple(DrafterProfile(speed=slow_factor if i == slow_node else 1.0)
+                 for i in range(n))
 
 
 def run(fixture, strategies=("ar", "specinfer", "pipeinfer", "cosine"),
         modes=("low", "high", "volatile"), quick: bool = False):
     if quick:
         modes = ("high", "volatile")
+    n_req = 6 if quick else 10
+    max_new = 12 if quick else 16
     rows = []
+    base = base_us = None   # homogeneous pipeinfer @ high: the straggler-
+    #                         sweep baseline (reused from the mode grid)
     for mode in modes:
         ref = None
         for strat in strategies:
             t0 = time.time()
-            (mean_lat, p95, ttft, wall_iter_us, vutil, bubble_ms,
-             n_invalid) = serve_online(
-                fixture, strat, mode,
-                n_requests=6 if quick else 10,
-                max_new=12 if quick else 16)
+            m = serve_online(fixture, strat, mode, n_requests=n_req,
+                             max_new=max_new)
             us = (time.time() - t0) * 1e6
             if strat == "specinfer":
-                ref = mean_lat
+                ref = m["ms_per_tok"]
+            if strat == "pipeinfer" and mode == "high":
+                base, base_us = m, us
             extra = ""
             if strat == "cosine" and ref:
-                extra = f";x_vs_specinfer={ref / max(mean_lat, 1e-9):.2f}"
-            # wall_us_per_iter: median real host time per engine iteration —
-            # the slot-cache engine's steady-state dispatch cost (the
-            # ms_per_tok numbers above are simulated deployment time);
-            # vutil/bubble_ms/invalidated are measured off the executor's
-            # event timeline (analytic decomposition for coupled baselines)
-            rows.append((f"fig7_{mode}_{strat}", us,
-                         f"ms_per_tok={mean_lat:.1f};p95={p95:.1f};"
-                         f"ttft_ms={ttft:.0f};"
-                         f"wall_us_per_iter={wall_iter_us:.0f};"
-                         f"vutil={vutil:.3f};bubble_ms={bubble_ms:.0f};"
-                         f"invalidated={n_invalid}{extra}"))
+                extra = (f";x_vs_specinfer="
+                         f"{ref / max(m['ms_per_tok'], 1e-9):.2f}")
+            rows.append((f"fig7_{mode}_{strat}", us, _fmt(m, extra)))
+
+    # --- heterogeneity / straggler sweep (one slowed node, high rate) ---
+    n_nodes = len(fixture.drafters)
+    sweep = (2.0,) if quick else (2.0, 4.0)
+    if base is None:  # high mode wasn't in the grid: run the baseline
+        t0 = time.time()
+        base = serve_online(fixture, "pipeinfer", "high", n_requests=n_req,
+                            max_new=max_new)
+        base_us = (time.time() - t0) * 1e6
+    rows.append(("fig7_hetero_pipeinfer_homog", base_us, _fmt(base)))
+    for f in sweep:
+        t0 = time.time()
+        m = serve_online(fixture, "cosine", "high", n_requests=n_req,
+                         max_new=max_new,
+                         profiles=_hetero_profiles(n_nodes, f))
+        us = (time.time() - t0) * 1e6
+        # the acceptance direction: straggler cut-off keeps cosine's
+        # verifier bubble below the homogeneous pipeinfer baseline
+        extra = (f";bubble_vs_pipeinfer="
+                 f"{m['bubble_ms'] / max(base['bubble_ms'], 1e-9):.2f}")
+        rows.append((f"fig7_hetero_slow{f:g}x_cosine", us, _fmt(m, extra)))
     return rows

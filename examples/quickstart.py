@@ -4,7 +4,6 @@ plain autoregressive decoding — all on CPU in ~2 minutes.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.config import CoSineConfig
 from repro.configs.drafters import tiny_drafter, tiny_target

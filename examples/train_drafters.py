@@ -8,7 +8,6 @@ Table-2-style acceptance matrix.
 import argparse
 import os
 
-import numpy as np
 
 from repro.checkpoint.store import save_checkpoint
 from repro.config import CoSineConfig

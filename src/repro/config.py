@@ -7,8 +7,8 @@ All configs are frozen dataclasses so they hash and can key jit caches.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional
 
 VOCAB_PAD_MULTIPLE = 256  # vocab padded so unembedding shards on any mesh axis
 
@@ -262,6 +262,17 @@ class CoSineConfig:
     max_batch: int = 16
     # adaptive speculation (Alg. 2)
     min_gamma: int = 1
+    # multi-node drafter cluster (DESIGN.md §2.4)
+    cut_pace_slack: float = 1.6    # fused lock-step window vs fastest node
+    straggler_grace_frac: float = 0.25  # grace (frac of fused draft time)
+    #                                     for late chains to join as side
+    #                                     branches before being dropped
+    conf_gate: float = 0.65        # fused confidence below which dispatch
+    #                                waits the grace window for side chains
+    straggler_policy: str = "side"  # "side" (late chains -> tree side
+    #                                 branches) | "drop" (discard)
+    straggler_penalty: float = 0.5  # router down-weight on chronically
+    #                                 late nodes (Eq. 3 exploration)
     # ablation switches (paper §6.4)
     enable_routing: bool = True    # False -> random drafter selection
     enable_fusion: bool = True     # False -> independent per-drafter chains

@@ -1,5 +1,5 @@
 """Architecture registry: --arch <id> resolves here."""
-from repro.config import ModelConfig, InputShape, INPUT_SHAPES
+from repro.config import ModelConfig, INPUT_SHAPES
 
 from repro.configs.deepseek_v3_671b import CONFIG as _deepseek
 from repro.configs.h2o_danube3_4b import CONFIG as _danube

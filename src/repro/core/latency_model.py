@@ -22,8 +22,7 @@ serving path never charges it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -36,6 +35,34 @@ HW = {
     "A100": dict(flops=5144e12 / 16, bw=2039e9, ssm_tps=9500.0, llm_tps=7.13,
                  rent=5.67, deploy=60000),
 }
+
+
+@dataclass(frozen=True)
+class DrafterProfile:
+    """Per-drafter-node latency personality (heterogeneous cluster).
+
+    The paper's speculation side is a *cluster* of consumer-GPU nodes, so
+    each drafter carries its own multiplier on the drafting step time, its
+    own link delay to the verification server, and a deterministic, seeded
+    jitter/straggler model (DESIGN.md §2.4):
+
+      speed           — step-time multiplier (2.0 = a 2x slower node)
+      comm_ms         — node->server transfer; None inherits the global
+      jitter_frac     — lognormal sigma of per-job pace noise
+      straggle_prob   — per-job probability of a straggle episode
+      straggle_factor — pace multiplier during a straggle episode
+    """
+    speed: float = 1.0
+    comm_ms: float | None = None
+    jitter_frac: float = 0.0
+    straggle_prob: float = 0.0
+    straggle_factor: float = 4.0
+
+
+def homogeneous_profiles(n: int) -> tuple:
+    """Default cluster: n identical, jitter-free nodes (the seed's
+    single-clock behaviour decomposed per node)."""
+    return tuple(DrafterProfile() for _ in range(n))
 
 
 @dataclass
@@ -68,6 +95,26 @@ class LatencyModel:
         sync = 0.05 * max(n_drafters - 1, 0)
         return gamma * (step + sync)
 
+    # ---- per-drafter-node primitives (heterogeneous cluster, §2.4) ----
+    def ssm_step_node(self, b: int, l: int, profile: DrafterProfile,
+                      pace_mult: float = 1.0) -> float:
+        """One drafting step on one cluster node: the homogeneous step
+        cost scaled by the node's speed and its (seeded) per-job pace
+        multiplier. The fusion sync term is a *cluster* property (it
+        depends on who the node syncs with), so it lives in
+        serving/cluster.py, not here."""
+        step = (self.ssm_step_ms + self.ssm_ctx_ms_per_ktok * l / 1000.0
+                + self.ssm_batch_ms * max(b - 1, 0))
+        return step * profile.speed * pace_mult
+
+    def sync_ms(self, n_sync: int) -> float:
+        """Per-step fusion synchronisation overhead for n_sync lock-step
+        nodes (matches the homogeneous t_ssm's sync term)."""
+        return 0.05 * max(n_sync - 1, 0)
+
+    def node_comm_ms(self, profile: DrafterProfile) -> float:
+        return self.comm_ms if profile.comm_ms is None else profile.comm_ms
+
     def t_llm(self, b: int, l: int, big_gamma: int) -> float:
         return (self.llm_base_ms + self.llm_token_ms * big_gamma
                 + self.llm_ctx_ms_per_ktok * b * l / 1000.0)
@@ -79,10 +126,14 @@ class LatencyModel:
         includes the cold-start prefill (DESIGN.md §2.2)."""
         return self.t_llm(1, l, l)
 
-    def iteration_coupled(self, b, l, gamma, big_gamma, n_drafters=1) -> float:
-        """Sequential draft -> verify (vanilla/SpecInfer)."""
-        return (self.t_ssm(b, l, gamma, n_drafters) + self.comm_ms
-                + self.t_llm(b, l, big_gamma))
+    def iteration_coupled(self, b, l, gamma, big_gamma, n_drafters=1,
+                          prefill_ms: float = 0.0) -> float:
+        """Sequential draft -> verify (vanilla/SpecInfer). `prefill_ms`
+        is the serialized prompt-forward time for the iteration's cold
+        requests — the coupled baselines pay TTFT on the same server the
+        pipelined strategies do (no free prefills)."""
+        return (prefill_ms + self.t_ssm(b, l, gamma, n_drafters)
+                + self.comm_ms + self.t_llm(b, l, big_gamma))
 
     def iteration_pipelined(self, b, l, gamma, big_gamma, n_drafters=1) -> float:
         """Analytic steady-state period of a perfectly overlapped pipeline:

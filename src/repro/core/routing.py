@@ -65,6 +65,12 @@ class AdaptiveRouter:
         self.embed = embed
         self.rng = np.random.default_rng(seed)
         self.scores: Dict[int, np.ndarray] = {}
+        # chronic-lateness EMA per drafter *node* (cluster feedback,
+        # DESIGN.md §2.4): 0 = always on time, -> 1 = always cut. Both
+        # the top-scoring order and the exploration draw of Eq. (3) are
+        # down-weighted by it, so straggling nodes stop being selected
+        # unless their routing score earns the extra latency.
+        self.node_lag = np.zeros(n_drafters, np.float32)
 
     def vector(self, rid: int) -> np.ndarray:
         if rid not in self.scores:
@@ -93,19 +99,37 @@ class AdaptiveRouter:
         self.scores[rid] = m
         return m
 
+    def note_node_outcome(self, node: int, role: str,
+                          ema: float = 0.8):
+        """Cluster feedback after each cohort: how late was `node`?
+        role: "fused" (on time) | "side" (late, salvaged) | "dropped"."""
+        lateness = {"fused": 0.0, "side": 0.5, "dropped": 1.0}[role]
+        self.node_lag[node] = ema * self.node_lag[node] \
+            + (1.0 - ema) * lateness
+
+    def _effective(self, m: np.ndarray) -> np.ndarray:
+        """Routing scores discounted by chronic node lateness."""
+        return m * (1.0 - self.cfg.straggler_penalty * self.node_lag)
+
     def route(self, rid: int, l_acc: float) -> List[int]:
         """Eq. (3): pick `drafters_per_request` drafters; each pick is
-        top-scoring with prob coef, uniformly random otherwise."""
-        m = self.vector(rid)
+        top-scoring with prob coef, random otherwise. Both modes are
+        down-weighted by chronic node lateness: the top order uses the
+        lag-discounted scores, and the exploration draw is biased away
+        from nodes that keep getting cut from cohorts."""
+        m_eff = self._effective(self.vector(rid))
         coef = self.cfg.alpha if l_acc < self.cfg.tau else self.cfg.beta
         chosen: List[int] = []
         avail = list(range(self.n))
-        order = sorted(avail, key=lambda i: -m[i])
+        order = sorted(avail, key=lambda i: -m_eff[i])
         for _ in range(min(self.cfg.drafters_per_request, self.n)):
             if self.rng.random() < coef:
                 pick = next(i for i in order if i not in chosen)
             else:
-                pick = int(self.rng.choice([i for i in avail if i not in chosen]))
+                rest = [i for i in avail if i not in chosen]
+                w = np.clip(1.0 - self.cfg.straggler_penalty
+                            * self.node_lag[rest], 1e-3, None)
+                pick = int(self.rng.choice(rest, p=w / w.sum()))
             chosen.append(pick)
         return sorted(chosen)
 

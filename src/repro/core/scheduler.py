@@ -38,11 +38,28 @@ class PipelineObservation:
     measured from the event timeline (not the analytic model).
     queue_depth: drafted cohorts waiting for the verification server.
     backlog: admitted requests the scheduler has not yet placed.
+    drafter_busy_fracs / drafter_wait_fracs: per-drafter-node occupancy
+    and queue-wait (time jobs sat waiting for the node, as a fraction of
+    its active span), measured off each node's stage clock (DESIGN.md
+    §2.4) — empty tuples under the coupled baselines.
     """
     verify_busy_frac: float = 1.0
     draft_busy_frac: float = 1.0
     queue_depth: int = 0
     backlog: int = 0
+    drafter_busy_fracs: Tuple[float, ...] = ()
+    drafter_wait_fracs: Tuple[float, ...] = ()
+
+    @property
+    def hottest_drafter_frac(self) -> float:
+        """Occupancy of the most saturated drafter node (falls back to
+        the aggregate when per-node data is unavailable)."""
+        return max(self.drafter_busy_fracs, default=self.draft_busy_frac)
+
+    @property
+    def max_drafter_wait_frac(self) -> float:
+        """Worst chronic queueing across the drafter nodes."""
+        return max(self.drafter_wait_fracs, default=0.0)
 
 
 def adaptive_speculation(gammas: List[int], gamma_max_total: int,
@@ -113,6 +130,14 @@ class RequestScheduler:
             if observation.verify_busy_frac < 0.8 \
                     and observation.backlog <= cfg.max_batch:
                 lam *= 0.5                      # verifier starved: draft more
+            if (observation.hottest_drafter_frac > 0.95
+                    or observation.max_drafter_wait_frac > 0.2) \
+                    and observation.verify_busy_frac < 0.95:
+                # a saturated (or chronically queued) drafter node while
+                # the verifier has slack means drafting is the
+                # bottleneck: extra speculation only lengthens the
+                # lock-step draft phase, so trim it
+                lam *= 2.0
         ctx_of = (lambda r: r.context_len + (extra_ctx or {}).get(r.rid, 0))
         cand = sorted(requests, key=lambda r: (ctx_of(r), r.arrival_ms))
         cand = cand[: 4 * cfg.max_batch]          # bound the search

@@ -12,8 +12,8 @@ batched JAX `verify_chunk` with the ancestor mask.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import List
 
 import numpy as np
 

@@ -11,7 +11,7 @@ do draft that domain better — which is what exercises CoSine's routing
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -80,13 +80,19 @@ class SyntheticCorpus:
 
     def prompts(self, n: int, length: int, seed: int = 0):
         """Evenly-mixed evaluation prompts with domain labels (paper §6.1:
-        8192 prompts sampled across the five datasets)."""
+        8192 prompts sampled across the five datasets).
+
+        A pure function of (n, length, seed): sampling uses the local
+        generator, NOT the corpus training stream (`self.rng`), so
+        callers get identical prompts regardless of what ran before —
+        the CI bench-regression gate relies on this (benchmark rows must
+        not depend on run order)."""
         rng = np.random.default_rng(seed)
         names = list(self.domains)
         out = []
         for i in range(n):
             d = names[i % len(names)]
-            out.append((self.sample(d, length), d))
+            out.append((self.domains[d].sample(rng, length), d))
         rng.shuffle(out)
         return out
 

@@ -9,7 +9,6 @@ matmuls, Q = chunk_size (default 128, MXU-aligned).
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -19,14 +19,13 @@ import json
 import re
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import INPUT_SHAPES, ModelConfig
-from repro.configs import ARCHS, LONG_CONTEXT_POLICY, get_config
+from repro.configs import LONG_CONTEXT_POLICY, get_config
 from repro.distributed import sharding as sh
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M

@@ -8,12 +8,10 @@ Usage (CPU example driver):
 from __future__ import annotations
 
 import argparse
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.config import ModelConfig
 from repro.data.synthetic import SyntheticCorpus, token_batches

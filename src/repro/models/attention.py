@@ -13,7 +13,6 @@ C >= window + max_segment (we allocate window + 128).
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,8 +12,6 @@ Params and caches are plain pytrees (nested dicts/tuples of jnp arrays).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

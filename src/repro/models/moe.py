@@ -9,7 +9,6 @@ FLOP-inflated but trivially-correct oracle used by tests.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -49,7 +49,8 @@ import numpy as np
 
 from repro.config import CoSineConfig, ModelConfig
 from repro.core import tree as tree_mod
-from repro.core.latency_model import LatencyModel
+from repro.core.latency_model import (DrafterProfile, LatencyModel,
+                                      homogeneous_profiles)
 from repro.core.request_pool import Request, RequestPool
 from repro.core.routing import AdaptiveRouter
 from repro.core.scheduler import (PipelineObservation, RequestScheduler,
@@ -79,9 +80,15 @@ class IterationRecord:
     verify_idle_ms: float = 0.0          # bubble before this verification
     prefill_ms: float = 0.0              # prompt forwards charged to the
     #                                      verify stage this iteration
-    #                                      (pipelined strategies only)
     queue_depth: int = 0                 # drafted cohorts waiting at commit
     n_invalidated: int = 0               # draft-ahead entries rejected
+    # --- per-drafter cluster accounting (DESIGN.md §2.4): busy time each
+    # node spent on this iteration's cohort (draft + any redrafts), and
+    # how many chains were demoted to side branches / dropped outright by
+    # the straggler policy. Empty/zero under the coupled baselines.
+    node_busy_ms: Tuple[float, ...] = ()
+    n_straggler_side: int = 0
+    n_straggler_dropped: int = 0
 
 
 @dataclass
@@ -128,6 +135,25 @@ class ServeStats:
     def n_invalidated(self) -> int:
         return sum(r.n_invalidated for r in self.records)
 
+    # --- drafter cluster health (DESIGN.md §2.4) ---
+    @property
+    def drafter_busy_ms(self) -> Tuple[float, ...]:
+        """Per-node busy time summed over all iteration records."""
+        width = max((len(r.node_busy_ms) for r in self.records), default=0)
+        out = [0.0] * width
+        for r in self.records:
+            for i, v in enumerate(r.node_busy_ms):
+                out[i] += v
+        return tuple(out)
+
+    @property
+    def n_straggler_side(self) -> int:
+        return sum(r.n_straggler_side for r in self.records)
+
+    @property
+    def n_straggler_dropped(self) -> int:
+        return sum(r.n_straggler_dropped for r in self.records)
+
 
 @dataclass
 class DraftEntry:
@@ -160,11 +186,13 @@ class SpeculativeEngine:
                  cosine: CoSineConfig, strategy: str = "cosine",
                  latency: Optional[LatencyModel] = None,
                  max_len: int = 512, seed: int = 0,
-                 eos_token: Optional[int] = None):
+                 eos_token: Optional[int] = None,
+                 drafter_profiles: Optional[Sequence[DrafterProfile]] = None):
         assert strategy in STRATEGIES, strategy
         self.strategy = strategy
         self.cfg = cosine
         self.eos = eos_token
+        self.seed = seed
         self.target_cfg, target_params = target
         self.target = ModelRunner(self.target_cfg, target_params, max_len)
         self.drafters = [ModelRunner(c, p, max_len) for c, p, _ in drafters]
@@ -182,6 +210,11 @@ class SpeculativeEngine:
         # violate causality in the event timeline
         self.avail_ms: Dict[int, float] = {}
         self.rng = np.random.default_rng(seed)
+        # heterogeneous cluster personalities (per-drafter stage clocks,
+        # DESIGN.md §2.4); default is the seed's homogeneous behaviour
+        self.drafter_profiles = (tuple(drafter_profiles) if drafter_profiles
+                                 else homogeneous_profiles(len(self.drafters)))
+        assert len(self.drafter_profiles) == len(self.drafters)
         # SSM/hybrid verifiers cannot apply tree masks -> chain-only trees
         self.tree_capable = self.target_cfg.family not in ("ssm", "hybrid")
         if strategy in PIPELINED_STRATEGIES:
@@ -276,12 +309,19 @@ class SpeculativeEngine:
         return tree_mod.chain_tree(chain_t, chain_p)
 
     def _draft_entries(self, batch: List[Request], gammas: List[int],
-                       optimistic: Optional[Dict[int, np.ndarray]] = None
+                       optimistic: Optional[Dict[int, np.ndarray]] = None,
+                       parts: Optional[List[List[int]]] = None,
+                       roles: Optional[Dict[int, str]] = None
                        ) -> List[DraftEntry]:
         """Draft one cohort. `optimistic[rid]` is an (N, n) matrix of
         per-drafter chain tokens assumed to already extend rid's committed
         context (draft-ahead); requests are grouped by assumption width so
-        teacher-forcing shapes stay exact (SSM-state safe)."""
+        teacher-forcing shapes stay exact (SSM-state safe).
+
+        parts/roles: precomputed per-request participants and per-node
+        cluster roles ("fused"/"side"/"dropped") from the drafter
+        cluster's timing plan (DESIGN.md §2.4); None means every
+        participant is on time (the coupled baselines)."""
         optimistic = optimistic or {}
         groups: Dict[int, List[int]] = {}
         for i, r in enumerate(batch):
@@ -291,22 +331,39 @@ class SpeculativeEngine:
         for n, idxs in sorted(groups.items()):
             sub = [batch[i] for i in idxs]
             sub_g = [gammas[i] for i in idxs]
+            sub_p = [parts[i] for i in idxs] if parts is not None else None
             teach = None
             if n:
                 teach = np.stack([optimistic[r.rid] for r in sub], axis=1)
-            for i, e in zip(idxs, self._draft_group(sub, sub_g, teach)):
+            for i, e in zip(idxs, self._draft_group(sub, sub_g, teach,
+                                                    parts=sub_p,
+                                                    roles=roles)):
                 entries[i] = e
         return entries  # type: ignore[return-value]
 
     def _draft_group(self, batch: List[Request], gammas: List[int],
-                     teach: Optional[np.ndarray] = None) -> List[DraftEntry]:
+                     teach: Optional[np.ndarray] = None,
+                     parts: Optional[List[List[int]]] = None,
+                     roles: Optional[Dict[int, str]] = None
+                     ) -> List[DraftEntry]:
         """Run the speculation cluster for one cohort (shared batch shape).
 
         teach: (N, B, n) per-drafter tokens to teacher-force into the slot
         snapshots before drafting (the optimistic context extension)."""
         B, K, N = len(batch), max(gammas), len(self.drafters)
         rids = [r.rid for r in batch]
-        parts = [self._participants(r) for r in batch]
+        if parts is None:
+            parts = [self._participants(r) for r in batch]
+        roles = roles or {}
+        # cluster roles (DESIGN.md §2.4): only on-time ("fused") nodes
+        # take part in per-step confidence fusion; cut nodes run free on
+        # their own chains. A request whose participants were all cut
+        # falls back to fusing over them (degenerate local quorum).
+        fuse_cand = [[i for i in p if roles.get(i, "fused") == "fused"] or p
+                     for p in parts]
+        # chains delivered to the server: everything not dropped
+        delivered = [[i for i in p if roles.get(i, "fused") != "dropped"]
+                     or fc for p, fc in zip(parts, fuse_cand)]
         fuse = self.strategy == "cosine" and self.cfg.enable_fusion
 
         # slot-snapshot drafting: one device-side gather per drafter; the
@@ -350,11 +407,11 @@ class SpeculativeEngine:
             all_tokens[:, :, i] = step_tokens
             all_confs[:, :, i] = np.maximum(step_confs, 0.0)
 
-            # confidence-based token fusion (Eq. 4)
+            # confidence-based token fusion (Eq. 4) over the on-time quorum
             fused = np.zeros(B, np.int32)
             fused_p = np.zeros(B, np.float32)
             for b in range(B):
-                cand = parts[b]
+                cand = fuse_cand[b]
                 masked = np.full(N, -1.0)
                 masked[cand] = step_confs[cand, b]
                 best = int(np.argmax(masked))
@@ -365,7 +422,12 @@ class SpeculativeEngine:
 
             if fuse:
                 for di in range(N):
-                    prev_per_d[di] = fused.copy()
+                    # cut nodes are out of the per-step sync: they chain
+                    # on their own proposals, not the fused token
+                    if roles.get(di, "fused") == "fused":
+                        prev_per_d[di] = fused.copy()
+                    else:
+                        prev_per_d[di] = step_tokens[di].copy()
             elif self.strategy in ("specinfer", "cosine"):
                 # independent chains (SpecInfer; CoSine w/o fusion ablation)
                 for di in range(N):
@@ -379,9 +441,12 @@ class SpeculativeEngine:
         out = []
         for b, r in enumerate(batch):
             g = gammas[b]
+            # the token tree only carries chains that physically reached
+            # the server (fused + in-grace side chains); dropped chains
+            # contribute neither branches nor routing evidence
             tree = self._build_entry_tree(
                 chain_tokens[b, :g], chain_probs[b, :g],
-                all_tokens[:, b, :g], all_confs[:, b, :g], parts[b], g)
+                all_tokens[:, b, :g], all_confs[:, b, :g], delivered[b], g)
             out.append(DraftEntry(
                 req=r, gamma=g, tree=tree,
                 fused_t=chain_tokens[b, :g].copy(),
@@ -389,7 +454,7 @@ class SpeculativeEngine:
                 d_toks=all_tokens[:, b, :g].copy(),
                 d_confs=all_confs[:, b, :g].copy(),
                 d_chains=d_chains[:, b, :g].copy(),
-                parts=parts[b]))
+                parts=delivered[b]))
         return out
 
     def _shift_entry(self, e: DraftEntry) -> Optional[DraftEntry]:
@@ -468,14 +533,20 @@ class SpeculativeEngine:
             self.clock_ms = min(future)   # idle until next arrival
             pending = self.pool.pending(self.clock_ms)
 
+        # cold requests pay their prompt forward on the same server the
+        # pipelined strategies do (serialized prefill jobs) — TTFT is
+        # apples-to-apples across all five strategies (ROADMAP item)
+        cold = [r for r in pending if r.rid not in self.entry_logits]
+        t_pf = sum(self.lat.t_prefill(r.context_len) for r in cold)
         for r in pending:
             self._ensure_prefilled(r)
 
         if self.strategy == "ar":
-            return self._step_ar(pending)
-        return self._step_coupled(pending)
+            return self._step_ar(pending, t_pf)
+        return self._step_coupled(pending, t_pf)
 
-    def _step_coupled(self, pending: List[Request]) -> IterationRecord:
+    def _step_coupled(self, pending: List[Request],
+                      prefill_ms: float = 0.0) -> IterationRecord:
         batch, gammas = self._plan_cohort(pending)
         entries = self._draft_entries(batch, gammas)
         committed, total_committed = self._verify_commit(entries)
@@ -487,14 +558,17 @@ class SpeculativeEngine:
         n_active = self.n_active(entries)
         t_ssm = self.lat.t_ssm(b, l, gmax, n_active)
         t_llm = self.lat.t_llm(b, l, big_gamma)
-        t_iter = self.lat.iteration_coupled(b, l, gmax, big_gamma, n_active)
+        t_iter = self.lat.iteration_coupled(b, l, gmax, big_gamma, n_active,
+                                            prefill_ms=prefill_ms)
         rec = IterationRecord(
             self.clock_ms, t_iter, b, big_gamma, total_committed, n_active,
-            draft_start_ms=self.clock_ms, draft_ms=t_ssm,
-            verify_start_ms=self.clock_ms + t_ssm + self.lat.comm_ms,
-            verify_ms=t_llm,
+            draft_start_ms=self.clock_ms + prefill_ms, draft_ms=t_ssm,
+            verify_start_ms=self.clock_ms + prefill_ms + t_ssm
+            + self.lat.comm_ms,
+            verify_ms=t_llm, prefill_ms=prefill_ms,
             # coupled execution: the verifier provably waits out the whole
-            # draft + communication phase every iteration
+            # draft + communication phase every iteration (prefill is
+            # server *busy* time, not idle)
             verify_idle_ms=t_ssm + self.lat.comm_ms)
         self._finalize(batch, committed, rec)
         if self.strategy == "cosine":
@@ -505,7 +579,8 @@ class SpeculativeEngine:
                         e.req, len(committed[e.req.rid]), busy)
         return rec
 
-    def _step_ar(self, pending: List[Request]) -> IterationRecord:
+    def _step_ar(self, pending: List[Request],
+                 prefill_ms: float = 0.0) -> IterationRecord:
         batch = sorted(pending, key=lambda r: r.arrival_ms)[: self.cfg.max_batch]
         committed: Dict[int, List[int]] = {}
         for r in batch:
@@ -516,9 +591,10 @@ class SpeculativeEngine:
             self.entry_logits[rid] = lg
         b = len(batch)
         l = max(r.context_len for r in batch)
-        t_iter = self.lat.t_llm(b, l, b)
-        rec = IterationRecord(self.clock_ms, t_iter, b, b, b, 0,
-                              verify_start_ms=self.clock_ms, verify_ms=t_iter)
+        t_llm = self.lat.t_llm(b, l, b)
+        rec = IterationRecord(self.clock_ms, t_llm + prefill_ms, b, b, b, 0,
+                              verify_start_ms=self.clock_ms + prefill_ms,
+                              verify_ms=t_llm, prefill_ms=prefill_ms)
         for r in batch:
             r.record_acceptance(1, 0)
         self._finalize(batch, committed, rec)

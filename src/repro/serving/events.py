@@ -78,6 +78,11 @@ class StageClock:
     busy_ms: float = 0.0
     idle_ms: float = 0.0
     n_jobs: int = 0
+    # queue accounting: time jobs spent waiting because this stage was
+    # still busy (their release time was earlier than free_ms) and how
+    # many jobs waited at all — per-node queue occupancy for the cluster
+    wait_ms: float = 0.0
+    n_queued: int = 0
 
     def park(self, t_ms: float):
         """Advance the stage to `t_ms` without accruing idle time: the
@@ -87,14 +92,24 @@ class StageClock:
             self.free_ms = t_ms
 
     def schedule(self, duration_ms: float, not_before_ms: float = 0.0,
-                 kind: str = "work", rids: Tuple[int, ...] = ()):
-        """Run `duration_ms` of work; returns (start, end, idle_gap)."""
+                 kind: str = "work", rids: Tuple[int, ...] = (),
+                 release_ms: Optional[float] = None):
+        """Run `duration_ms` of work; returns (start, end, idle_gap).
+
+        release_ms: when the job actually became runnable, for the queue
+        accounting only (defaults to not_before_ms). A job released
+        while the stage was still busy counts the gap as queue wait."""
         start = max(self.free_ms, not_before_ms)
         gap = start - self.free_ms
         end = start + duration_ms
         self.idle_ms += gap
         self.busy_ms += duration_ms
         self.n_jobs += 1
+        release = not_before_ms if release_ms is None else release_ms
+        waited = max(self.free_ms - release, 0.0)
+        if waited > 0.0:
+            self.wait_ms += waited
+            self.n_queued += 1
         self.free_ms = end
         if self.log is not None:
             self.log.emit(start, self.name, f"{kind}_start", rids)

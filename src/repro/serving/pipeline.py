@@ -1,12 +1,16 @@
 """Discrete-event decoupled pipeline executor (paper §4.3 Alg. 2,
 PipeInfer-style decoupling; DESIGN.md §2).
 
-Two logical stages, each a serial resource with its own simulated clock
-(`StageClock`):
+The speculation side is a *multi-node drafter cluster* — one `StageClock`
+per drafter node with its own latency profile (serving/cluster.py,
+DESIGN.md §2.4) — feeding a serial verification server:
 
-  speculation cluster ("draft")  --tokens-->  verification server ("verify")
+  drafter nodes (draft0..draftN)  --tokens-->  verification server ("verify")
 
-The cluster drafts cohort i+1 while the server verifies cohort i. For
+A cohort fans out across the router-selected nodes, fuses when the
+confidence-gated quorum arrives, and cuts stragglers loose (late chains
+join the side-branch tree or are dropped — they never block the verify
+clock). The cluster drafts cohort i+1 while the server verifies i. For
 requests whose iteration-i verification is still in flight, drafting
 proceeds *optimistically* on slot snapshots: the drafter state is
 teacher-forced over the iteration-i fused chain (assumed fully accepted)
@@ -42,10 +46,13 @@ off the event timeline; nothing here consults the analytic
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.core.scheduler import PipelineObservation
+from repro.serving.cluster import DrafterCluster
 from repro.serving.events import DRAFT, VERIFY, EventLog, StageClock
 
 
@@ -57,21 +64,33 @@ class DraftJob:
     draft_ms: float
     ready_ms: float                      # arrival at the verification server
     n_active: int
+    # per-drafter-node busy time spent on this cohort (draft + redrafts)
+    node_busy: Dict[int, float] = field(default_factory=dict)
+    n_straggler_side: int = 0
+    n_straggler_dropped: int = 0
 
 
 class PipelineExecutor:
     """Advances one verification commit per `step()` call; the draft
-    stage runs (at most) one cohort ahead of the verifier."""
+    cluster runs (at most) one cohort ahead of the verifier. Drafting is
+    fanned out across the router-selected nodes of a `DrafterCluster`,
+    each with its own stage clock and latency profile (DESIGN.md §2.4)."""
 
     def __init__(self, engine):
         self.eng = engine
         self.log = EventLog()
-        self.draft = StageClock(DRAFT, self.log)
+        self.cluster = DrafterCluster(engine.drafter_profiles, engine.lat,
+                                      engine.cfg, self.log,
+                                      seed=engine.seed)
         self.verify = StageClock(VERIFY, self.log)
         self.next_job: Optional[DraftJob] = None
         # measured verifier occupancy (EMA) consumed by Alg. 2's adaptive
         # speculation feedback; >1 means drafted work queued at the server
         self.busy_ema = 1.0
+        # fused-confidence EMA over committed cohorts: the cluster's
+        # dispatch gate (wait for late side chains only when recent
+        # speculation has been low-confidence). Starts optimistic.
+        self.conf_ema = 1.0
         self.n_survived = 0
         self.n_invalidated = 0
         # prefill time scheduled on the verify stage since the last
@@ -94,9 +113,17 @@ class PipelineExecutor:
                        and waiting.ready_ms < self._vfree_before) else 0
         return PipelineObservation(
             verify_busy_frac=self.verify.busy_frac(),
-            draft_busy_frac=self.draft.busy_frac(),
+            draft_busy_frac=self.cluster.aggregate_busy_frac(),
             queue_depth=queued,
-            backlog=backlog)
+            backlog=backlog,
+            drafter_busy_fracs=self.cluster.busy_fracs(),
+            drafter_wait_fracs=self.cluster.wait_fracs())
+
+    def _observe_conf(self, entries) -> None:
+        """Fold a drafted cohort's fused confidences into the EMA the
+        *next* cohort's dispatch gate consumes."""
+        conf = float(np.mean(np.concatenate([e.fused_p for e in entries])))
+        self.conf_ema = 0.7 * self.conf_ema + 0.3 * conf
 
     # ------------------------------------------------------------ drafting
     def _spawn_job(self, prev: Optional[DraftJob]) -> Optional[DraftJob]:
@@ -104,10 +131,10 @@ class PipelineExecutor:
 
         prev is the cohort currently awaiting verification: its requests
         are drafted ahead optimistically (assumed fully accepted). With
-        no prev (cold pipe) the stage idles until the next arrival."""
+        no prev (cold pipe) the cluster idles until the next arrival."""
         eng = self.eng
         inflight = ({e.req.rid: e for e in prev.entries} if prev else {})
-        t_vis = self.draft.free_ms
+        t_vis = self.cluster.horizon_ms()
 
         def avail(r):
             # an in-flight request's optimistic continuation is legal as
@@ -124,7 +151,7 @@ class PipelineExecutor:
                 return None
             t_vis = min(avail(r) for r in everyone)
             cands = [r for r in everyone if avail(r) <= t_vis]
-            self.draft.park(t_vis)     # lull: no work existed, not a bubble
+            self.cluster.park_all(t_vis)  # lull: no work existed, not a bubble
 
         def opt_ext(r):     # optimistic tokens this commit would add
             e = inflight.get(r.rid)
@@ -157,23 +184,46 @@ class PipelineExecutor:
             extra_ctx=extra)
         optim = {r.rid: inflight[r.rid].d_chains
                  for r in batch if r.rid in inflight}
-        entries = eng._draft_entries(batch, gammas, optimistic=optim)
+
+        K = max(gammas)
+        l = max(r.context_len + extra.get(r.rid, 0) for r in batch)
+        rids = tuple(r.rid for r in batch)
+        # drafting cannot start before every cold member's prefill landed
+        # nor before a warm member's context was committed; per-node
+        # availability is enforced by the node clocks themselves (the
+        # horizon is NOT part of the gate — a cut node running long must
+        # never delay the next cohort's on-time nodes)
+        gate = max([0.0] + [avail(r) for r in batch
+                            if r.rid not in inflight])
+        # fan the cohort out across the router-selected drafter nodes:
+        # the cluster assigns roles (on-time fused quorum / side / cut)
+        # and the confidence-gated dispatch before token drafting — pace
+        # depends only on profiles + seeded jitter, and the gate consumes
+        # the fused-confidence EMA measured over *previous* cohorts, so
+        # nothing about the timing can depend on this cohort's tokens
+        parts_by_req = {r.rid: eng._participants(r) for r in batch}
+        plan = self.cluster.plan_cohort(parts_by_req, l, K, gate,
+                                        conf_signal=self.conf_ema,
+                                        release_ms=max(gate, t_vis))
+        roles = plan.roles()
+        entries = eng._draft_entries(
+            batch, gammas, optimistic=optim,
+            parts=[plan.parts_by_req[r.rid] for r in batch], roles=roles)
         for e in entries:
             if e.req.rid in optim:
                 e.assumed = [int(t) for t in inflight[e.req.rid].fused_t]
 
-        b, K = len(batch), max(gammas)
-        l = max(r.context_len + extra.get(r.rid, 0) for r in batch)
+        self._observe_conf(entries)
+        sched = self.cluster.commit_cohort(plan, rids, kind="draft")
+        for node, role in roles.items():
+            eng.router.note_node_outcome(node, role)
         n_active = eng.n_active(entries)
-        t_draft = eng.lat.t_ssm(b, l, K, n_active)
-        rids = tuple(r.rid for r in batch)
-        # drafting cannot start before every cold member's prefill landed
-        gate = max([t_vis] + [avail(r) for r in batch
-                              if r.rid not in inflight])
-        start, end, _ = self.draft.schedule(t_draft, not_before_ms=gate,
-                                            kind="draft", rids=rids)
-        return DraftJob(entries, start, t_draft, end + eng.lat.comm_ms,
-                        n_active)
+        drops = [d.role for d in sched.drafts]
+        return DraftJob(entries, sched.start_ms, sched.draft_ms,
+                        sched.ready_ms, n_active,
+                        node_busy=sched.node_busy(),
+                        n_straggler_side=drops.count("side"),
+                        n_straggler_dropped=drops.count("dropped"))
 
     # ------------------------------------------------------------ reconcile
     def _reconcile(self, ahead: DraftJob, committed: Dict[int, List[int]],
@@ -216,18 +266,30 @@ class PipelineExecutor:
                           tuple(r.rid for r in invalid))
         if redo:
             gammas = eng._cohort_gammas(redo)
-            redo_entries = eng._draft_entries(redo, gammas)
-            b, K = len(redo), max(gammas)
+            K = max(gammas)
             l = max(r.context_len for r in redo)
+            parts_by_req = {r.rid: eng._participants(r) for r in redo}
+            plan = self.cluster.plan_cohort(parts_by_req, l, K, t_known_ms,
+                                            conf_signal=self.conf_ema)
+            roles = plan.roles()
+            redo_entries = eng._draft_entries(
+                redo, gammas,
+                parts=[plan.parts_by_req[r.rid] for r in redo], roles=roles)
+            self._observe_conf(redo_entries)
+            sched = self.cluster.commit_cohort(
+                plan, tuple(r.rid for r in redo), kind="redraft")
+            for node, role in roles.items():
+                eng.router.note_node_outcome(node, role)
             n_active = eng.n_active(redo_entries)
-            t_red = eng.lat.t_ssm(b, l, K, n_active)
-            start, end, _ = self.draft.schedule(
-                t_red, not_before_ms=t_known_ms, kind="redraft",
-                rids=tuple(r.rid for r in redo))
             ahead.entries = keep + redo_entries
-            ahead.draft_ms += t_red
-            ahead.ready_ms = max(ahead.ready_ms, end + eng.lat.comm_ms)
+            ahead.draft_ms += sched.draft_ms
+            ahead.ready_ms = max(ahead.ready_ms, sched.ready_ms)
             ahead.n_active = max(ahead.n_active, n_active)
+            for node, busy in sched.node_busy().items():
+                ahead.node_busy[node] = ahead.node_busy.get(node, 0.0) + busy
+            drops = [d.role for d in sched.drafts]
+            ahead.n_straggler_side += drops.count("side")
+            ahead.n_straggler_dropped += drops.count("dropped")
         if not ahead.entries:
             return None
         return ahead
@@ -282,7 +344,11 @@ class PipelineExecutor:
             draft_start_ms=job.draft_start_ms, draft_ms=job.draft_ms,
             verify_start_ms=vstart, verify_ms=t_llm,
             verify_idle_ms=bubble, prefill_ms=self._prefill_acc_ms,
-            queue_depth=queue_depth)
+            queue_depth=queue_depth,
+            node_busy_ms=tuple(job.node_busy.get(i, 0.0)
+                               for i in range(len(eng.drafters))),
+            n_straggler_side=job.n_straggler_side,
+            n_straggler_dropped=job.n_straggler_dropped)
         self._prefill_acc_ms = 0.0
         eng._finalize(batch, committed, rec)
 

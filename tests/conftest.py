@@ -8,8 +8,6 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))  # _hypothesis_fallback
 
-import jax
-import numpy as np
 import pytest
 
 from repro.config import ModelConfig, SSMConfig

@@ -1,0 +1,315 @@
+"""Multi-node drafter cluster (serving/cluster.py, DESIGN.md §2.4):
+per-drafter clock determinism under a fixed seed, straggler cut-off
+losslessness, and the occupancy-vs-event-log accounting property."""
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # declared dep; degrade so collection never hard-fails
+    from _hypothesis_fallback import given, settings, st
+
+from conftest import TINY_MAX_LEN as MAX_LEN, tiny_model_cfg as _tiny
+from repro.config import CoSineConfig, ModelConfig
+from repro.core.latency_model import (DrafterProfile, LatencyModel,
+                                      homogeneous_profiles)
+from repro.core.routing import AdaptiveRouter
+from repro.serving.cluster import DROPPED, FUSED, SIDE, DrafterCluster
+from repro.serving.engine import SpeculativeEngine
+from repro.serving.events import EventLog
+
+
+HETERO = (DrafterProfile(speed=1.0),
+          DrafterProfile(speed=2.4, comm_ms=2.0, jitter_frac=0.3,
+                         straggle_prob=0.5, straggle_factor=3.0))
+EXTREME = (DrafterProfile(speed=1.0),
+           DrafterProfile(speed=8.0, straggle_prob=1.0, straggle_factor=5.0))
+
+
+# ------------------------------------------------------------ pure cluster
+def _mk_cluster(profiles, seed=0, **cfg_kw):
+    cfg = CoSineConfig(n_drafters=len(profiles), **cfg_kw)
+    return DrafterCluster(profiles, LatencyModel(), cfg, EventLog(),
+                          seed=seed)
+
+
+def _drive(cluster, n_cohorts=6, seed=0):
+    """Plan+commit a deterministic stream of cohorts; returns the trace."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for k in range(n_cohorts):
+        n = len(cluster.nodes)
+        parts = {100 + 2 * k: sorted(rng.choice(n, size=min(2, n),
+                                                replace=False).tolist()),
+                 101 + 2 * k: [int(rng.integers(0, n))]}
+        plan = cluster.plan_cohort(parts, l=64 + 8 * k, gamma=4, gate_ms=t,
+                                   conf_signal=float(rng.random()))
+        cluster.commit_cohort(plan, kind="draft")
+        t = plan.fused_end_ms
+    return cluster.log.trace()
+
+
+def test_per_drafter_clock_determinism_fixed_seed():
+    t1 = _drive(_mk_cluster(HETERO, seed=7))
+    t2 = _drive(_mk_cluster(HETERO, seed=7))
+    assert t1 == t2 and len(t1) > 0
+    # per-node stages appear in the stream
+    stages = {ev[2] for ev in t1}
+    assert "draft0" in stages and "draft1" in stages
+    # a different seed reshuffles the jitter stream (jitter_frac > 0)
+    t3 = _drive(_mk_cluster(HETERO, seed=8))
+    assert t3 != t1
+
+
+def test_fastest_node_never_cut_and_roles_partition():
+    cluster = _mk_cluster(EXTREME)
+    plan = cluster.plan_cohort({1: [0, 1], 2: [1]}, l=64, gamma=4,
+                               gate_ms=0.0)
+    roles = plan.roles()
+    assert roles[0] == FUSED                     # fastest node anchors fusion
+    assert roles[1] in (SIDE, DROPPED)           # 8x slow + straggle: cut
+    # coverage rider: request 2's only drafter was cut, so it was
+    # rerouted onto the fastest on-time node
+    assert 0 in plan.parts_by_req[2]
+    cluster.commit_cohort(plan)
+    assert cluster.n_side + cluster.n_dropped == 1
+    assert cluster.node_late[1] == 1 and cluster.node_late[0] == 0
+
+
+def test_straggler_never_blocks_dispatch():
+    """With recent confidence above the gate, the cohort ships with the
+    fused group no matter how late the cut chain is; below the gate it
+    waits at most the grace window for side chains — and every chain in
+    the dispatched tree has arrived by ready_ms (causality)."""
+    cluster = _mk_cluster(EXTREME, straggler_policy="drop")
+    plan = cluster.plan_cohort({1: [0, 1]}, l=64, gamma=5, gate_ms=0.0,
+                               conf_signal=0.99)
+    sched = cluster.commit_cohort(plan)
+    assert sched.dispatch_ms == sched.fused_end_ms
+    included = [d for d in sched.drafts if d.role != DROPPED]
+    assert sched.ready_ms == max(d.arrival_ms for d in included)
+
+    cluster2 = _mk_cluster(HETERO, seed=3)
+    plan2 = cluster2.plan_cohort({1: [0, 1]}, l=64, gamma=5, gate_ms=0.0,
+                                 conf_signal=0.0)
+    sched2 = cluster2.commit_cohort(plan2)
+    fused_arr = max(d.arrival_ms for d in sched2.drafts if d.role == FUSED)
+    for d in sched2.drafts:
+        if d.role == SIDE:
+            assert d.arrival_ms <= fused_arr + sched2.grace_ms + 1e-9
+        if d.role != DROPPED:
+            assert d.arrival_ms <= sched2.ready_ms + 1e-9
+
+
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(1, 5),
+       st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_occupancy_sums_match_event_log(seed, n_nodes, n_cohorts, gamma):
+    """Property: each node clock's busy time equals the sum of its
+    (start, end) spans in the event log, roles partition the
+    participants, and dispatch/ready ordering holds."""
+    rng = np.random.default_rng(seed)
+    profiles = tuple(DrafterProfile(
+        speed=float(rng.uniform(0.5, 4.0)),
+        jitter_frac=float(rng.uniform(0.0, 0.4)),
+        straggle_prob=float(rng.uniform(0.0, 0.6)),
+        straggle_factor=float(rng.uniform(1.5, 6.0)))
+        for _ in range(n_nodes))
+    cluster = _mk_cluster(profiles, seed=seed)
+    t = 0.0
+    for k in range(n_cohorts):
+        parts = {}
+        for rid in range(3):
+            sz = int(rng.integers(1, n_nodes + 1))
+            parts[10 * k + rid] = sorted(
+                rng.choice(n_nodes, size=sz, replace=False).tolist())
+        plan = cluster.plan_cohort(parts, l=int(rng.integers(8, 512)),
+                                   gamma=gamma, gate_ms=t,
+                                   conf_signal=float(rng.random()))
+        roles = plan.roles()
+        assert set(roles.values()) <= {FUSED, SIDE, DROPPED}
+        assert any(r == FUSED for r in roles.values())
+        for p in plan.parts_by_req.values():     # coverage rider invariant
+            assert any(roles[i] == FUSED for i in p)
+        sched = cluster.commit_cohort(plan)
+        assert sched.ready_ms >= sched.dispatch_ms >= sched.fused_end_ms - 1e-9
+        included = [d for d in sched.drafts if d.role != DROPPED]
+        # causality: the cohort is ready only once every included chain
+        # has physically arrived; per-link delay is paid exactly once
+        assert abs(sched.ready_ms - max(d.arrival_ms for d in included)) \
+            < 1e-9
+        assert abs(sched.dispatch_ms - max(d.end_ms for d in included)) \
+            < 1e-9
+        fused_arr = max(d.arrival_ms for d in sched.drafts
+                        if d.role == FUSED)
+        for d in sched.drafts:
+            if d.role == SIDE:
+                assert d.arrival_ms <= fused_arr + sched.grace_ms + 1e-9
+        t = sched.dispatch_ms
+    # the accounting property: per-node clock busy == event-log span sum
+    for i, clk in enumerate(cluster.nodes):
+        starts = [ev.t_ms for ev in cluster.log.events
+                  if ev.stage == f"draft{i}" and ev.kind.endswith("_start")]
+        ends = [ev.t_ms for ev in cluster.log.events
+                if ev.stage == f"draft{i}" and ev.kind.endswith("_end")]
+        assert len(starts) == len(ends) == clk.n_jobs
+        log_busy = sum(e - s for s, e in zip(sorted(starts), sorted(ends)))
+        assert abs(log_busy - clk.busy_ms) < 1e-6
+        assert clk.idle_ms >= -1e-9 and clk.wait_ms >= -1e-9
+
+
+# --------------------------------------------------------- engine-level
+def _init_params(cfg, key):
+    from repro.models import model as M
+    return M.init_params(key, cfg)
+
+
+@pytest.fixture(scope="module")
+def models():
+    tcfg = _tiny("attn")
+    scfg = _tiny("ssm")
+    key = jax.random.PRNGKey(0)
+    tparams = _init_params(tcfg, key)
+    sparams = _init_params(scfg, key)
+    dcfg = ModelConfig(name="tiny-draft", family="dense", n_layers=1,
+                       d_model=48, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=96, vocab=50, tie_embeddings=True,
+                       dtype="float32")
+    drafters = [(dcfg, _init_params(dcfg, jax.random.PRNGKey(i + 1)), f"d{i}")
+                for i in range(2)]
+    return {"attn": (tcfg, tparams), "ssm": (scfg, sparams),
+            "drafters": drafters}
+
+
+def _greedy_reference(cfg, params, prompt, n):
+    import jax.numpy as jnp
+    from repro.models import model as M
+    cache = M.init_cache(cfg, 1, MAX_LEN, dtype=jnp.float32)
+    lg, cache, _ = M.prefill(params, cfg, jnp.asarray(prompt)[None, :], cache)
+    last = np.asarray(lg[0, -1, :cfg.vocab])
+    out = []
+    for _ in range(n):
+        t = int(np.argmax(last))
+        out.append(t)
+        lg, cache, _ = M.decode_step(params, cfg, jnp.asarray([[t]]), cache)
+        last = np.asarray(lg[0, 0, :cfg.vocab])
+    return out
+
+
+def _engine(models, family, strategy, profiles, seed=0, **cos_kw):
+    cos = CoSineConfig(n_drafters=2, draft_len=4, drafters_per_request=2,
+                       tree_width=2, **cos_kw)
+    return SpeculativeEngine(models[family], models["drafters"], cos,
+                             strategy=strategy, max_len=MAX_LEN, seed=seed,
+                             drafter_profiles=profiles)
+
+
+def _prompts(n, rng_seed=3, length=8):
+    rng = np.random.default_rng(rng_seed)
+    return [rng.integers(1, 50, length).tolist() for _ in range(n)]
+
+
+@pytest.mark.parametrize("policy", ["side", "drop"])
+def test_straggler_cutoff_lossless_attn(models, policy):
+    """Extreme straggler (8x slow, always straggling): its chains are cut
+    from every cohort, and generation still equals the target's greedy
+    continuation — losslessness holds regardless of who is cut."""
+    tcfg, tparams = models["attn"]
+    eng = _engine(models, "attn", "cosine", EXTREME,
+                  straggler_policy=policy)
+    for p, t in zip(_prompts(3, rng_seed=13), [0.0, 100.0, 400.0]):
+        eng.submit(p, max_new_tokens=8, arrival_ms=t)
+    stats = eng.run()
+    assert eng.pool.empty and len(eng.pool.completed) == 3
+    for r in eng.pool.completed:
+        assert r.generated == _greedy_reference(tcfg, tparams, r.prompt, 8), \
+            policy
+    cl = eng.executor.cluster
+    assert cl.n_side + cl.n_dropped > 0          # the straggler was cut
+    if policy == "drop":
+        assert cl.n_side == 0
+    # records' per-node busy never exceeds what the clocks measured
+    # (drained ahead-cohorts may leave clock busy unrecorded, never less)
+    rec_busy = stats.drafter_busy_ms
+    for i, clk in enumerate(cl.nodes):
+        assert rec_busy[i] <= clk.busy_ms + 1e-6
+    assert stats.n_straggler_side == sum(
+        r.n_straggler_side for r in stats.records)
+
+
+@pytest.mark.slow
+def test_straggler_cutoff_lossless_ssm_target(models):
+    """Chain-only trees (SSM verifier) with a cut straggler stay
+    lossless too."""
+    scfg, sparams = models["ssm"]
+    eng = _engine(models, "ssm", "cosine", EXTREME)
+    for p, t in zip(_prompts(3, rng_seed=17), [0.0, 90.0, 350.0]):
+        eng.submit(p, max_new_tokens=8, arrival_ms=t)
+    eng.run()
+    assert eng.pool.empty
+    for r in eng.pool.completed:
+        assert r.generated == _greedy_reference(scfg, sparams, r.prompt, 8)
+    assert eng.executor.cluster.n_side + eng.executor.cluster.n_dropped > 0
+
+
+def test_hetero_engine_event_stream_deterministic(models):
+    """Jittery heterogeneous cluster: a fixed engine seed reproduces the
+    per-node event streams and the generated tokens byte-for-byte."""
+    def trace(seed):
+        eng = _engine(models, "attn", "cosine", HETERO, seed=seed)
+        for p, t in zip(_prompts(3, rng_seed=19), [0.0, 80.0, 250.0]):
+            eng.submit(p, max_new_tokens=6, arrival_ms=t)
+        eng.run()
+        gen = {tuple(r.prompt.tolist()): list(r.generated)
+               for r in eng.pool.completed}
+        return eng.executor.log.trace(), gen
+
+    t1, g1 = trace(4)
+    t2, g2 = trace(4)
+    assert t1 == t2 and g1 == g2
+
+
+def test_slow_node_bubble_below_sluggish_sync():
+    """The acceptance direction: with a 2x slow second node, the cluster
+    that cuts stragglers keeps the verifier better fed than a lock-step
+    cluster forced to sync with the slow node (modeled by widening the
+    pace slack so nothing is ever cut)."""
+    lat = LatencyModel()
+    cfg_cut = CoSineConfig(n_drafters=2, cut_pace_slack=1.6)
+    cfg_sync = CoSineConfig(n_drafters=2, cut_pace_slack=1e9)
+    profiles = (DrafterProfile(speed=1.0), DrafterProfile(speed=2.0))
+
+    def fused_end(cfg):
+        cl = DrafterCluster(profiles, lat, cfg, EventLog(), seed=0)
+        plan = cl.plan_cohort({1: [0, 1], 2: [0, 1]}, l=64, gamma=5,
+                              gate_ms=0.0)
+        return plan.fused_end_ms
+
+    assert fused_end(cfg_cut) < fused_end(cfg_sync)
+
+
+def test_router_downweights_chronically_late_nodes():
+    cfg = CoSineConfig(n_drafters=3, drafters_per_request=1, alpha=0.0,
+                       beta=0.0, straggler_penalty=0.8)
+    embed = np.random.default_rng(0).normal(size=(8, 4)).astype(np.float32)
+    router = AdaptiveRouter(3, cfg, embed, seed=0)
+    for _ in range(30):
+        router.note_node_outcome(2, "dropped")
+    # pure exploration (coef=0): the chronically-late node is rarely drawn
+    picks = [router.route(0, l_acc=0.0)[0] for _ in range(200)]
+    frac_late = np.mean([p == 2 for p in picks])
+    assert frac_late < 0.15
+    assert router.node_lag[2] > 0.9
+    # exploitation order also discounts it
+    router.scores[1] = np.array([0.5, 0.5, 0.55], np.float32)
+    cfg2 = CoSineConfig(n_drafters=3, drafters_per_request=1, alpha=1.0,
+                        beta=1.0, straggler_penalty=0.8)
+    router.cfg = cfg2
+    assert router.route(1, l_acc=0.0)[0] != 2
+
+
+def test_homogeneous_profiles_default():
+    profs = homogeneous_profiles(3)
+    assert len(profs) == 3
+    assert all(p.speed == 1.0 and p.jitter_frac == 0.0 for p in profs)

@@ -30,6 +30,35 @@ def test_verification_cheaper_than_ar_per_token():
     assert t_verify < t_ar
 
 
+def test_iteration_coupled_charges_prefill():
+    """The coupled baselines pay cold-start prompt forwards (TTFT parity
+    with the pipelined strategies, which schedule prefill jobs on the
+    verify stage)."""
+    lat = LatencyModel()
+    base = lat.iteration_coupled(2, 128, 4, 8)
+    pf = lat.t_prefill(128)
+    assert abs(lat.iteration_coupled(2, 128, 4, 8, prefill_ms=pf)
+               - (base + pf)) < 1e-9
+    assert pf > 0
+
+
+def test_per_node_primitives_match_homogeneous_model():
+    """A default (speed=1, no jitter) profile decomposes t_ssm exactly:
+    gamma * (step + sync) == t_ssm(b, l, gamma, n)."""
+    from repro.core.latency_model import DrafterProfile
+    lat = LatencyModel()
+    prof = DrafterProfile()
+    for b, l, g, n in [(1, 64, 3, 1), (4, 512, 5, 3), (8, 2048, 2, 2)]:
+        per_node = g * (lat.ssm_step_node(b, l, prof) + lat.sync_ms(n))
+        assert abs(per_node - lat.t_ssm(b, l, g, n)) < 1e-9
+    # heterogeneity scales the step, comm override falls back correctly
+    slow = DrafterProfile(speed=2.0, comm_ms=3.5)
+    assert abs(lat.ssm_step_node(1, 64, slow)
+               - 2.0 * lat.ssm_step_node(1, 64, prof)) < 1e-12
+    assert lat.node_comm_ms(slow) == 3.5
+    assert lat.node_comm_ms(prof) == lat.comm_ms
+
+
 def test_cost_model_charges_drafters():
     lat = LatencyModel()
     c0 = lat.cost_per_ms(0)

@@ -1,6 +1,5 @@
 """Scheduler (Eq. 5-8 / Alg. 2) and routing (Eq. 1-3) properties."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:     # declared dep; degrade so collection never hard-fails
@@ -8,7 +7,7 @@ except ImportError:     # declared dep; degrade so collection never hard-fails
 
 from repro.config import CoSineConfig
 from repro.core.latency_model import LatencyModel
-from repro.core.request_pool import Request, RequestPool
+from repro.core.request_pool import RequestPool
 from repro.core.routing import AdaptiveRouter, routing_score, \
     verification_accuracy
 from repro.core.scheduler import RequestScheduler, adaptive_speculation
