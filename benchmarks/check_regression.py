@@ -8,8 +8,10 @@ Gated metrics (simulated-deployment numbers, deterministic given the
 trained fixture -- wall-clock metrics like us_per_call/wall_us_per_iter
 are runner-dependent noise and are reported but never gated):
 
-  * ms_per_tok -- throughput proxy: fail if it rises more than 15%
-  * vutil      -- verifier utilization: fail if it drops more than 15%
+  * ms_per_tok  -- throughput proxy: fail if it rises more than 15%
+  * vutil       -- verifier utilization: fail if it drops more than 15%
+  * draft_calls -- drafter token-decodes: fail if it rises more than 15%
+                   (sub-batched drafting regressing toward full fan-out)
 
 A row present in the baseline but missing from the fresh run (or present
 but ERROR) fails the gate: lost coverage is a regression too. New rows
@@ -23,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 # metric -> (direction, relative tolerance); direction "up" means larger
@@ -30,6 +33,10 @@ import sys
 GATES = {
     "ms_per_tok": ("up", 0.15),
     "vutil": ("down", 0.15),
+    # drafter compute: sum over cohorts/nodes of draft_len * |sub-batch|.
+    # Route-faithful sub-batching keeps this at ~k*B*gamma per cohort; a
+    # >15% rise means drafting regressed toward the N*B full fan-out
+    "draft_calls": ("up", 0.15),
 }
 # reported in the delta table but never gated (noisy or informational)
 REPORT_ONLY = (
@@ -103,7 +110,13 @@ def compare(fresh: dict, base: dict, prefix: str):
                 continue
             if bv is None or fv is None:
                 continue
-            delta = (fv - bv) / bv if bv else 0.0
+            if bv:
+                delta = (fv - bv) / bv
+            else:
+                # a zero baseline must not disable the gate: any move off
+                # zero is an unbounded relative change (e.g. draft_calls
+                # appearing on a strategy that never drafted)
+                delta = 0.0 if fv == bv else math.copysign(math.inf, fv - bv)
             verdict = "ok"
             if metric in GATES:
                 direction, tol = GATES[metric]

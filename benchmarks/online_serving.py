@@ -7,6 +7,10 @@ numbers measured by the discrete-event executor (DESIGN.md §2.2):
 verifier utilization (busy over busy+bubble), total bubble ms,
 draft-ahead invalidation count, and — for pipelined strategies — the
 per-drafter-node utilizations measured off each node's stage clock.
+Route-faithful drafting compute shows up as `draft_calls` (total drafter
+token-decodes, ~= k*B*gamma per cohort instead of the SpecInfer-style
+N*B*gamma) and `dtoks` (the per-node drafted-token split — each node's
+routed sub-batch sizes times the draft length).
 
 The straggler sweep runs cosine on a cluster where one node is slowed by
 a factor (2x, 4x): the cut-loose policy keeps the verifier fed, so
@@ -67,6 +71,10 @@ def serve_online(fixture, strategy: str, mode: str, n_requests: int = 10,
         dutil = "|".join(f"{f:.2f}" for f in cl.busy_fracs())
         dlate = "|".join(str(c) for c in cl.node_late)
         n_side, n_dropped = cl.n_side, cl.n_dropped
+    # route-faithful drafting compute: draft_calls = sum over cohorts and
+    # nodes of draft_len * |routed sub-batch| (~= k*B*gamma per cohort,
+    # vs the SpecInfer-style N*B*gamma full fan-out); dtoks is the
+    # per-node split of the same count
     return dict(
         ms_per_tok=float(np.mean(lat)),
         p95=float(np.percentile(lat, 95)),
@@ -76,6 +84,8 @@ def serve_online(fixture, strategy: str, mode: str, n_requests: int = 10,
         vutil=float(stats.verifier_utilization),
         bubble_ms=float(stats.verifier_idle_ms),
         n_invalid=int(stats.n_invalidated),
+        draft_calls=int(stats.draft_calls),
+        dtoks="|".join(str(c) for c in stats.node_drafted),
         dutil=dutil, dlate=dlate, n_side=n_side, n_dropped=n_dropped)
 
 
@@ -90,7 +100,9 @@ def _fmt(m, extra=""):
          f"ttft_ms={m['ttft']:.0f};"
          f"wall_us_per_iter={m['wall_iter_us']:.0f};"
          f"vutil={m['vutil']:.3f};bubble_ms={m['bubble_ms']:.0f};"
-         f"invalidated={m['n_invalid']}")
+         f"invalidated={m['n_invalid']};draft_calls={m['draft_calls']}")
+    if m["dtoks"]:
+        s += f";dtoks={m['dtoks']}"
     if m["dutil"]:
         s += (f";dutil={m['dutil']};dlate={m['dlate']};side={m['n_side']};"
               f"dropped={m['n_dropped']}")

@@ -273,6 +273,13 @@ class CoSineConfig:
     #                                 branches) | "drop" (discard)
     straggler_penalty: float = 0.5  # router down-weight on chronically
     #                                 late nodes (Eq. 3 exploration)
+    # route-faithful drafting (DESIGN.md §2.4): each drafter decodes only
+    # the requests routed to it (its sub-batch), so drafter compute scales
+    # with sum(|sub-batch|) ~= k*B rather than N*B. False restores the
+    # legacy full fan-out (every node decodes the whole cohort) — kept for
+    # the token-equivalence tests and as an explicit SpecInfer-style
+    # ablation of the routing's compute saving.
+    subbatch_drafting: bool = True
     # ablation switches (paper §6.4)
     enable_routing: bool = True    # False -> random drafter selection
     enable_fusion: bool = True     # False -> independent per-drafter chains

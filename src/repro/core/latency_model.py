@@ -127,12 +127,17 @@ class LatencyModel:
         return self.t_llm(1, l, l)
 
     def iteration_coupled(self, b, l, gamma, big_gamma, n_drafters=1,
-                          prefill_ms: float = 0.0) -> float:
+                          prefill_ms: float = 0.0,
+                          draft_b: int | None = None) -> float:
         """Sequential draft -> verify (vanilla/SpecInfer). `prefill_ms`
         is the serialized prompt-forward time for the iteration's cold
         requests — the coupled baselines pay TTFT on the same server the
-        pipelined strategies do (no free prefills)."""
-        return (prefill_ms + self.t_ssm(b, l, gamma, n_drafters)
+        pipelined strategies do (no free prefills). `draft_b` is the
+        drafting-side batch when it differs from the verified one (routed
+        sub-batches: the most loaded node's share, not the cohort)."""
+        return (prefill_ms
+                + self.t_ssm(b if draft_b is None else draft_b, l, gamma,
+                             n_drafters)
                 + self.comm_ms + self.t_llm(b, l, big_gamma))
 
     def iteration_pipelined(self, b, l, gamma, big_gamma, n_drafters=1) -> float:

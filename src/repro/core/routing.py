@@ -9,6 +9,15 @@ normalized harmonic mean (Eq. 2) and EMA-smoothed. Routing (Eq. 3) mixes
 top-score selection T(.) with random selection R(.), gated on the recent
 acceptance length vs. threshold tau.
 
+Evidence is participants-only: `update` folds in rows for the drafters
+that actually drafted the request. Under route-faithful sub-batched
+drafting (DESIGN.md §2.4) non-participant rows of the proposal matrices
+hold no live tokens at all, so this is load-bearing, not just a
+preference (property-tested in tests/test_subbatch.py). The routes this
+class emits are likewise real content now — each selected node decodes
+the request in its own sub-batch — so `node_lag`'s down-weighting and
+the scheduler's hot-node trim act on true per-node occupancy.
+
 Note (DESIGN.md): the paper states alpha > beta for exploration, which
 would make exploration *more* greedy than exploitation; we implement the
 evidently-intended semantics (exploration mode uses a lower top-scoring

@@ -108,7 +108,7 @@ class RequestScheduler:
         return 64
 
     def plan(self, requests: Sequence[Request], pipelined: bool = True,
-             n_drafters: int = 1,
+             n_drafters: int = 1, n_nodes: int = 0,
              observation: Optional[PipelineObservation] = None,
              extra_ctx: Optional[Dict[int, int]] = None) -> BatchPlan:
         """Solve Eq. (8) over length-sorted prefixes.
@@ -120,6 +120,12 @@ class RequestScheduler:
           than a batch can hold, extra speculation per request would just
           delay them, and the objective's t_ttl/b term should drive wider
           batches instead.
+        n_nodes: cluster size. With route-faithful sub-batching each of
+          the n_nodes drafters decodes only its routed share, so the
+          drafting estimate charges the expected per-node sub-batch
+          ceil(b * n_drafters / n_nodes) instead of the cohort width —
+          per-node load is real content now, and the plan's t_ssm must
+          track the occupancy the hot-node trim acts on.
         extra_ctx: rid -> extra context tokens assumed beyond the
           committed state (draft-ahead plans against optimistic lengths).
         """
@@ -139,6 +145,12 @@ class RequestScheduler:
                 # lock-step draft phase, so trim it
                 lam *= 2.0
         ctx_of = (lambda r: r.context_len + (extra_ctx or {}).get(r.rid, 0))
+
+        def draft_b(b: int) -> int:
+            if n_nodes > 1 and cfg.subbatch_drafting:
+                return max(1, -(-b * min(n_drafters, n_nodes) // n_nodes))
+            return b
+
         cand = sorted(requests, key=lambda r: (ctx_of(r), r.arrival_ms))
         cand = cand[: 4 * cfg.max_batch]          # bound the search
         best: BatchPlan | None = None
@@ -148,7 +160,7 @@ class RequestScheduler:
             gam = adaptive_speculation([r.gamma for r in sel],
                                        cfg.gamma_max_total, cfg.min_gamma)
             big_g = sum(gam)
-            t_ssm = self.lat.t_ssm(b, l, max(gam), n_drafters)
+            t_ssm = self.lat.t_ssm(draft_b(b), l, max(gam), n_drafters)
             t_llm = self.lat.t_llm(b, l, big_g)
             t_ttl = (max(t_ssm + self.lat.comm_ms, t_llm) if pipelined
                      else t_ssm + self.lat.comm_ms + t_llm)
@@ -166,7 +178,7 @@ class RequestScheduler:
         if best is None and cand:   # SLO-infeasible: serve the shortest alone
             r = cand[0]
             g = [max(self.cfg.min_gamma, min(r.gamma, self.cfg.gamma_max_total))]
-            t_ssm = self.lat.t_ssm(1, ctx_of(r), g[0], n_drafters)
+            t_ssm = self.lat.t_ssm(draft_b(1), ctx_of(r), g[0], n_drafters)
             t_llm = self.lat.t_llm(1, ctx_of(r), g[0])
             best = BatchPlan([r], g, t_ssm, t_llm,
                              t_ssm + self.lat.comm_ms + t_llm, float("inf"))

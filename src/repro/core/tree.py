@@ -69,10 +69,16 @@ def build_tree(chain_tokens, chain_probs, side_tokens, side_probs,
     for d in range(K):
         cand = {}
         for n in range(side_tokens.shape[1]):
+            p = float(side_probs[d, n])
+            if p < 0.0:
+                # masked column (non-participant / dropped chain): its
+                # token is not a proposal and must not leak into the
+                # tree, even when fewer than tree_width real candidates
+                # exist at this depth
+                continue
             t = int(side_tokens[d, n])
             if t == int(chain_tokens[d]):
                 continue
-            p = float(side_probs[d, n])
             if t not in cand or p > cand[t][0]:
                 cand[t] = (p, int(side_drafters[d, n]))
         best = sorted(cand.items(), key=lambda kv: -kv[1][0])[: tree_width]

@@ -276,7 +276,7 @@ def take_rows(cache, slot_idx):
 
 
 def _attend_cached(qg, k_new, v_new, cache, positions, *, scale, window,
-                   block, seg_mask, slot_idx, write, par):
+                   block, seg_mask, slot_idx, write, par, token_mask=None):
     """Shared cache-backed attention core for GQA and MLA.
 
     Gathers the active rows (slot pool or plain batch), optionally writes
@@ -284,12 +284,19 @@ def _attend_cached(qg, k_new, v_new, cache, positions, *, scale, window,
     write delta for the caller's top-level scatter), and attends either
     over the written cache (plain decode/extend) or over the unmodified
     history merged with the fresh segment (no-commit scoring / tree
-    masks). Returns (out, new_cache | write-delta | None)."""
+    masks). Returns (out, new_cache | write-delta | None).
+
+    token_mask: (B, T) bool — suffix shape-padding rows (False) are
+    written with slot_pos = -1 at their real column slots: invisible to
+    every read (masking is always against slot_pos) and overwritten by
+    the next real tokens at those positions."""
     B, T = positions.shape
+    k_pos = (positions if token_mask is None
+             else jnp.where(token_mask, positions, -1))
     sub = take_rows(cache, slot_idx)
     new_sub, new_cache = None, None
     if write:
-        rows = kv_rows(sub, k_new, v_new, positions)
+        rows = kv_rows(sub, k_new, v_new, k_pos)
         new_sub = set_rows(sub, rows, positions)
         new_cache = rows if slot_idx is not None else new_sub
     if not write or seg_mask is not None:
@@ -302,7 +309,7 @@ def _attend_cached(qg, k_new, v_new, cache, positions, *, scale, window,
         out = blocked_attention(
             qg, ck, cv, positions, sub["slot_pos"],
             scale=scale, causal=True, window=window, block=block,
-            segment=(k_new, v_new, positions, mask_s), parallel=par)
+            segment=(k_new, v_new, k_pos, mask_s), parallel=par)
     else:
         ck, cv = dequantize_cache(new_sub)
         out = blocked_attention(
@@ -356,7 +363,7 @@ def _project_qkv(p, cfg: ModelConfig, x, positions, rope: bool):
 
 def gqa_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
                   seg_mask=None, window=0, block=1024, slot_idx=None,
-                  write=True):
+                  write=True, token_mask=None):
     """Self-attention for any mode.
 
     x: (B, T, d); positions: (B, T) absolute positions of these tokens.
@@ -394,7 +401,7 @@ def gqa_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
         out, new_cache = _attend_cached(
             qg, k, v, cache, positions, scale=scale, window=window,
             block=block, seg_mask=seg_mask, slot_idx=slot_idx, write=write,
-            par=par)
+            par=par, token_mask=token_mask)
     out = out.reshape(B, T, hq * hd)
     return out @ p["wo"], new_cache
 
@@ -483,7 +490,7 @@ def _rms(x, scale, eps):
 
 def mla_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
                   seg_mask=None, window=0, block=1024, slot_idx=None,
-                  write=True):
+                  write=True, token_mask=None):
     """Absorbed MLA: the cache holds only (c_kv ++ k_pe) per token; W_UK is
     absorbed into the query and W_UV applied to the attention output. This
     is single-latent-head attention (Hkv=1, G=H). slot_idx/write as in
@@ -520,7 +527,7 @@ def mla_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
         out_lat, new_cache = _attend_cached(
             qg, k_eff, v_eff, cache, positions, scale=scale, window=window,
             block=block, seg_mask=seg_mask, slot_idx=slot_idx, write=write,
-            par=par)
+            par=par, token_mask=token_mask)
     out_lat = out_lat.reshape(B, T, H, m.kv_lora_rank)
     wuv = p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
     out = jnp.einsum("bthr,rhv->bthv", out_lat, wuv).reshape(B, T, H * m.v_head_dim)

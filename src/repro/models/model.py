@@ -268,16 +268,24 @@ def slot_decode_step(params, cfg: ModelConfig, tokens, cache, slot_idx,
 
 
 def slot_extend(params, cfg: ModelConfig, tokens, cache, slot_idx,
-                frontend=None):
+                frontend=None, token_mask=None):
     """Commit a (B, G) chain of accepted tokens into the slotted cache —
     in place: G rows per active slot, never the full sub-cache. frontend
     (modality embeddings) refreshes cross-attention rows for the active
-    slots (prefill)."""
+    slots (prefill).
+
+    token_mask: optional (B, G) bool — True for real tokens, False for a
+    *suffix* of shape padding (chunked prefill's pad-and-mask final
+    chunk). Masked tokens advance nothing: their KV rows are written
+    with slot_pos = -1 (invisible to every read, and re-occupied by the
+    next real tokens at those positions), SSM state/conv ignore them,
+    and `lengths` advances by the real-token count only."""
     G = tokens.shape[1]
     positions = (jnp.take(cache["lengths"], slot_idx)[:, None]
                  + jnp.arange(G, dtype=jnp.int32))
     return apply(params, cfg, tokens, positions, cache=cache,
-                 frontend=frontend, write=True, slot_idx=slot_idx)
+                 frontend=frontend, write=True, slot_idx=slot_idx,
+                 token_mask=token_mask)
 
 
 def slot_verify_chunk(params, cfg: ModelConfig, tokens, cache, slot_idx,
@@ -295,7 +303,8 @@ def slot_verify_chunk(params, cfg: ModelConfig, tokens, cache, slot_idx,
 # ====================================================== apply
 
 def _apply_sublayer(spec: LayerSpec, p, cache, x, positions, cfg: ModelConfig,
-                    *, seg_mask, write, kv_src, causal=True, slot_idx=None):
+                    *, seg_mask, write, kv_src, causal=True, slot_idx=None,
+                    token_mask=None):
     """Returns (x, new_cache, aux). With slot_idx, `cache` is a resident
     slot pool (batch axis > B): mixers gather the active rows for reads
     and `new_cache` holds sub-sized *write deltas* (new KV rows / fresh
@@ -312,17 +321,19 @@ def _apply_sublayer(spec: LayerSpec, p, cache, x, positions, cfg: ModelConfig,
             out, new_self = attn.gqa_attention(
                 p["mixer"], cfg, h, positions, cache=self_cache,
                 seg_mask=seg_mask, window=window, slot_idx=slot_idx,
-                write=write)
+                write=write, token_mask=token_mask)
         else:  # encoder: bidirectional, no rope
             out, new_self = _bidir_attention(p["mixer"], cfg, h)
     elif spec.mixer == "mla":
         out, new_self = attn.mla_attention(
             p["mixer"], cfg, h, positions, cache=self_cache,
-            seg_mask=seg_mask, window=window, slot_idx=slot_idx, write=write)
+            seg_mask=seg_mask, window=window, slot_idx=slot_idx, write=write,
+            token_mask=token_mask)
     else:  # ssm
         out, new_self = ssm_mod.ssm_mixer(p["mixer"], cfg, h,
                                           state=self_cache,
-                                          slot_idx=slot_idx, write=write)
+                                          slot_idx=slot_idx, write=write,
+                                          token_mask=token_mask)
     if not write:
         new_self = self_cache if slot_idx is None else None
     x = (x + out).astype(x.dtype)
@@ -410,7 +421,7 @@ def _scatter_stage_delta(scache, deltas, slot_idx, positions):
 
 def _apply_stage(pattern, sparams, scache, x, positions, cfg: ModelConfig,
                  *, seg_mask, write, kv_src, causal=True, remat=False,
-                 slot_idx=None):
+                 slot_idx=None, token_mask=None):
     def body(carry, xs):
         xx = carry
         lp, lc = xs
@@ -421,7 +432,7 @@ def _apply_stage(pattern, sparams, scache, x, positions, cfg: ModelConfig,
             xx, ncj, aux = _apply_sublayer(
                 spec, lp[j], cj, xx, positions, cfg,
                 seg_mask=seg_mask, write=write, kv_src=kv_src, causal=causal,
-                slot_idx=slot_idx)
+                slot_idx=slot_idx, token_mask=token_mask)
             new_lc.append(ncj)
             aux_tot = aux_tot + aux
         return xx, (tuple(new_lc), aux_tot)
@@ -457,7 +468,7 @@ def _logits(params, cfg: ModelConfig, x):
 
 def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
           frontend=None, seg_mask=None, write=True, remat=False,
-          return_hidden=False, slot_idx=None):
+          return_hidden=False, slot_idx=None, token_mask=None):
     """Unified forward.
 
     tokens:    (B, T) int32
@@ -472,11 +483,21 @@ def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
                active slots (paged-attention-style in-place update);
                reads gather the active rows. The returned cache is the
                full pool.
+    token_mask: (B, T) bool — real tokens True, suffix shape-padding
+               False (slot path only; chunked prefill's pad-and-mask
+               final chunk). Attention sees masked tokens at position -1
+               (their KV rows land at the real column slots but with
+               slot_pos = -1, so they are invisible and the next real
+               tokens at those positions overwrite them); the SSM mixer
+               freezes its state/conv across them; `lengths` advances by
+               the real-token count only.
     Returns (logits (B,T,Vp) f32, new_cache, aux_loss) [+ hidden if asked].
     """
     B, T = tokens.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    if token_mask is not None:
+        assert slot_idx is not None, "token_mask requires the slot path"
     dtype = jnp.dtype(cfg.dtype)
     x = params["embed"][tokens].astype(dtype)
     if cfg.pos_embed == "learned":
@@ -498,7 +519,7 @@ def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
         x, ncache, aux = _apply_stage(
             pattern, sparams, scache, x, positions, cfg,
             seg_mask=seg_mask, write=write, kv_src=kv_src, remat=remat,
-            slot_idx=slot_idx)
+            slot_idx=slot_idx, token_mask=token_mask)
         if slot_idx is not None and cache is not None:
             # resident path: the scan produced write deltas; scatter them
             # into the pool here (top level, donated buffers)
@@ -518,8 +539,12 @@ def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
             if slot_idx is None:
                 new_len = jnp.maximum(new_len, positions[:, -1] + 1)
             else:
-                upd = jnp.maximum(jnp.take(new_len, slot_idx),
-                                  positions[:, -1] + 1)
+                # masked suffix tokens never advance the slot length (the
+                # max masked position is the last *real* one; an
+                # all-masked row yields -1 and leaves the length as-is)
+                last = (positions[:, -1] if token_mask is None
+                        else jnp.where(token_mask, positions, -1).max(-1))
+                upd = jnp.maximum(jnp.take(new_len, slot_idx), last + 1)
                 new_len = new_len.at[slot_idx].set(upd)
         new_cache = {"stages": new_stages, "lengths": new_len}
     if return_hidden:

@@ -176,7 +176,7 @@ def _gated_rmsnorm(y, z, scale, eps):
 
 
 def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False,
-              slot_idx=None, write=True):
+              slot_idx=None, write=True, token_mask=None):
     """Full-sequence (state=None or carried) SSD mixer.
 
     x: (B, L, d_model). Returns (out, new_state or None).
@@ -187,6 +187,13 @@ def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False,
     delta* the caller scatters into the pool at the top of the jitted
     step. write=False scores without committing the recurrent state
     (returns new_state=None).
+
+    token_mask: (B, L) bool — real tokens True, *suffix* shape padding
+    False (chunked prefill's pad-and-mask final chunk). Masked tokens
+    get dt = 0, so the recurrence passes the state through them
+    unchanged (exp(0) decay, zero input); the carried conv history is
+    gathered at each row's real-token count so it holds the last real
+    tokens, not the padding.
     """
     s = cfg.ssm
     D = cfg.d_model
@@ -195,6 +202,8 @@ def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False,
     B_, L, _ = x.shape
 
     st = take_rows(state, slot_idx) if state is not None else None
+    if token_mask is not None:
+        assert st is not None, "token_mask requires a carried state"
 
     z, xbc, dt = _split_in_proj(x @ p["in_proj"], cfg)
     if st is not None:
@@ -202,7 +211,14 @@ def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False,
         hist = st["conv"].astype(xbc.dtype)
         xbc_ext = jnp.concatenate([hist, xbc], axis=1)
         conv_out = _causal_conv(xbc_ext, p["conv_w"], p["conv_b"])[:, hist.shape[1]:]
-        new_conv = xbc_ext[:, -(s.d_conv - 1):, :] if s.d_conv > 1 else hist
+        if token_mask is None or s.d_conv <= 1:
+            new_conv = xbc_ext[:, -(s.d_conv - 1):, :] if s.d_conv > 1 else hist
+        else:
+            # the last d_conv-1 *real* rows: real tokens are a prefix, so
+            # row b's window ends at hist_len + n_valid[b] in xbc_ext
+            n_valid = token_mask.sum(-1).astype(jnp.int32)          # (B,)
+            idx = n_valid[:, None] + jnp.arange(s.d_conv - 1)       # (B, K-1)
+            new_conv = jnp.take_along_axis(xbc_ext, idx[:, :, None], axis=1)
     else:
         conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
         new_conv = None
@@ -212,6 +228,10 @@ def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False,
     Bmat = xbc[..., din: din + G * N].reshape(B_, L, G, N)
     Cmat = xbc[..., din + G * N:].reshape(B_, L, G, N)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if token_mask is not None:
+        # dt = 0 makes a masked token a no-op in the recurrence: decay
+        # exp(0 * A) = 1 and input weight dt * B x = 0
+        dt = jnp.where(token_mask[:, :, None], dt, 0.0)
     A = -jnp.exp(p["A_log"])
 
     init = st["ssm"] if st is not None else None
@@ -227,8 +247,10 @@ def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False,
 
     new_state = None
     if state is not None and write:
+        adv = (L if token_mask is None
+               else token_mask.sum(-1).astype(jnp.int32))
         new_state = {"ssm": (s_final if slot_idx is None
                              else s_final.astype(state["ssm"].dtype)),
                      "conv": new_conv.astype(state["conv"].dtype),
-                     "pos": st["pos"] + L}
+                     "pos": st["pos"] + adv}
     return out, new_state

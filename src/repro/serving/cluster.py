@@ -10,12 +10,17 @@ fusion of Eq. 4 are exposed to real per-node latency skew.
 
 Cohort semantics (one drafted cohort = one `CohortSchedule`):
 
-  * The participating nodes are split by *pace* into a lock-step **fused
-    group** — nodes within `cut_pace_slack` of the fastest node's
-    per-step time; they synchronise every step for confidence fusion, so
-    the group advances at its slowest member's pace plus the sync
-    overhead — and **cut** nodes, whose chains run free at their own
-    pace (they would otherwise drag every fused step).
+  * The participating nodes are split by *pace* into **fused** nodes —
+    within `cut_pace_slack` of the fastest node's per-step time — and
+    **cut** nodes, whose chains run free at their own pace (they would
+    otherwise drag every fused step). Lock-step sync binds only fused
+    nodes that *share fused requests*: per-step Eq. 4 fusion exchanges
+    tokens within a request's participants, so the fused set is
+    partitioned into connected components of the "co-drafts a request"
+    graph and each component advances at its own slowest member's pace
+    plus a component-sized sync term. Node shapes are the routed
+    sub-batches the engine actually decodes (route-faithful drafting —
+    see `SpeculativeEngine._draft_group`).
   * Cut chains are never allowed to block the verify clock: a chain
     whose server arrival beats the fused payload rides along for free as
     tree side branches (`role="side"`); the **confidence gate** extends
@@ -76,6 +81,8 @@ class CohortSchedule:
     gamma: int
     gate_ms: float
     grace_ms: float
+    l: int = 0                   # cohort critical context length (per-job
+    #                              pace observations / calibration)
     # when the cohort became runnable (queue-wait accounting only):
     # spawn jobs exist once the previous cohort's drafting finished,
     # redrafts once the rejection outcome is known
@@ -123,6 +130,10 @@ class DrafterCluster:
         self.n_dropped = 0
         self.node_jobs = [0] * len(self.nodes)
         self.node_late = [0] * len(self.nodes)   # side or dropped episodes
+        # per-job pace observations (b, l, step_ms) per node — the raw
+        # material for profile auto-calibration (calibrated_profiles)
+        self.pace_obs: List[List[Tuple[int, int, float]]] = \
+            [[] for _ in self.nodes]
 
     # ------------------------------------------------------------- state
     def horizon_ms(self) -> float:
@@ -164,6 +175,35 @@ class DrafterCluster:
         return busy / span if span > 0 else 1.0
 
     # ---------------------------------------------------------- planning
+    @staticmethod
+    def _fused_components(fused: List[int],
+                          parts_by_req: Dict[int, List[int]]
+                          ) -> List[List[int]]:
+        """Partition the on-time nodes into lock-step sync groups: two
+        fused nodes synchronise iff they are connected through shared
+        fused requests (per-step Eq. 4 fusion only ever exchanges tokens
+        within a request's participants, so disjoint sub-batches have
+        nothing to wait for)."""
+        parent = {i: i for i in fused}
+
+        def find(i):
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        fused_set = set(fused)
+        for p in parts_by_req.values():
+            members = [i for i in p if i in fused_set]
+            for a, b in zip(members, members[1:]):
+                ra, rb = find(a), find(b)
+                if ra != rb:
+                    parent[ra] = rb
+        comps: Dict[int, List[int]] = {}
+        for i in fused:
+            comps.setdefault(find(i), []).append(i)
+        return [sorted(c) for c in sorted(comps.values())]
+
     def _jitter_mult(self, node: int) -> float:
         """Deterministic seeded jitter/straggle multiplier for one node's
         next job. Both draws are always consumed so the stream position
@@ -221,25 +261,34 @@ class DrafterCluster:
         drafts = {i: NodeDraft(i, shapes[i], paces[i]) for i in parts}
         starts = {i: max(self.nodes[i].free_ms, gate_ms) for i in parts}
 
-        # lock-step fused group: every step waits for the slowest member
-        # (plus the per-step fusion sync), and the group advances together
-        # from its latest member's start
-        sync = self.lat.sync_ms(len(fused))
-        group_start = max(starts[i] for i in fused)
-        group_step = max(paces[i] for i in fused) + sync
-        group_end = group_start + gamma * group_step
-        for i in fused:
-            d = drafts[i]
-            d.start_ms = starts[i]
-            d.end_ms = group_end
-            d.busy_ms = group_end - starts[i]   # sync waits occupy the node
-            d.arrival_ms = group_end + self.lat.node_comm_ms(self.profiles[i])
-            d.role = FUSED
+        # lock-step sync binds only nodes that actually share fused
+        # requests: with route-faithful sub-batches two on-time nodes
+        # with disjoint sub-batches never exchange a fused token, so the
+        # fused set is partitioned into connected components of the
+        # "co-drafts a request" graph and each component advances at its
+        # own slowest member's pace (plus a sync term sized to the
+        # component, not the whole on-time set)
+        max_group_step = 0.0
+        for comp in self._fused_components(fused, parts_by_req):
+            sync = self.lat.sync_ms(len(comp))
+            group_start = max(starts[i] for i in comp)
+            group_step = max(paces[i] for i in comp) + sync
+            max_group_step = max(max_group_step, group_step)
+            group_end = group_start + gamma * group_step
+            for i in comp:
+                d = drafts[i]
+                d.start_ms = starts[i]
+                d.end_ms = group_end
+                d.busy_ms = group_end - starts[i]  # sync waits occupy the node
+                d.arrival_ms = group_end \
+                    + self.lat.node_comm_ms(self.profiles[i])
+                d.role = FUSED
         # the fused payload is at the server once the slowest fused link
         # has delivered; a cut chain beating that time rides along free
         t_fused_arr = max(drafts[i].arrival_ms for i in fused)
+        fused_end = max(drafts[i].end_ms for i in fused)
 
-        grace = self.cfg.straggler_grace_frac * gamma * group_step
+        grace = self.cfg.straggler_grace_frac * gamma * max_group_step
         policy = self.cfg.straggler_policy
         wait = conf_signal < self.cfg.conf_gate
         deadline = t_fused_arr + (grace if wait else 0.0)
@@ -255,11 +304,12 @@ class DrafterCluster:
         included = [d for d in drafts.values() if d.role != DROPPED]
         sched = CohortSchedule(drafts=[drafts[i] for i in parts],
                                gamma=gamma, gate_ms=gate_ms, grace_ms=grace,
+                               l=l,
                                release_ms=(gate_ms if release_ms is None
                                            else release_ms),
                                parts_by_req=parts_by_req,
                                start_ms=min(starts[i] for i in parts),
-                               fused_end_ms=group_end,
+                               fused_end_ms=fused_end,
                                # last included chain leaves its node /
                                # reaches the server (per-link delay paid
                                # exactly once, inside arrival_ms)
@@ -267,6 +317,40 @@ class DrafterCluster:
                                ready_ms=max(d.arrival_ms for d in included))
         sched.draft_ms = sched.dispatch_ms - sched.start_ms
         return sched
+
+    # ------------------------------------------------------ calibration
+    def calibrated_profiles(self, min_jobs: int = 4
+                            ) -> Tuple[DrafterProfile, ...]:
+        """Fit each node's latency personality from its measured per-job
+        paces (fit-style, like `LatencyModel.fit_ssm`).
+
+        Every committed job leaves one observation (b, l, step_ms); the
+        ratio of step_ms to the homogeneous step cost at that (b, l) is
+        speed * jitter-multiplier, so log-ratios are `log speed` plus the
+        lognormal noise. The fit is robust to straggle episodes: speed is
+        the exp-median of the log-ratios and jitter_frac the MAD-based
+        sigma, so occasional straggles widen jitter instead of biasing
+        speed (an always-straggling node honestly calibrates to its
+        effective pace). Nodes with fewer than `min_jobs` observations
+        keep their configured profile (no evidence, no refit); measured
+        straggle episodes are absorbed into the fitted spread, so the
+        returned profiles carry straggle_prob=0."""
+        base = DrafterProfile()
+        out = []
+        for node, obs in enumerate(self.pace_obs):
+            if len(obs) < min_jobs:
+                out.append(self.profiles[node])
+                continue
+            logr = np.array([math.log(step / self.lat.ssm_step_node(b, l,
+                                                                    base))
+                             for b, l, step in obs])
+            med = float(np.median(logr))
+            mad = float(np.median(np.abs(logr - med)))
+            out.append(DrafterProfile(
+                speed=math.exp(med),
+                comm_ms=self.profiles[node].comm_ms,
+                jitter_frac=1.4826 * mad))
+        return tuple(out)
 
     # ----------------------------------------------------------- commit
     def commit_cohort(self, sched: CohortSchedule,
@@ -288,6 +372,7 @@ class DrafterCluster:
                 release_ms=max(sched.gate_ms, sched.release_ms))
             assert abs(start - d.start_ms) < 1e-9 and abs(end - d.end_ms) < 1e-9
             self.node_jobs[d.node] += 1
+            self.pace_obs[d.node].append((d.b, sched.l, d.step_ms))
             if d.role != FUSED:
                 self.node_late[d.node] += 1
         self.n_cohorts += 1

@@ -96,6 +96,21 @@ class ServeStats:
     records: List[IterationRecord] = field(default_factory=list)
     total_committed: int = 0
     total_drafted: int = 0
+    # --- route-faithful drafting compute (DESIGN.md §2.4) ---
+    # draft_calls: total drafter token-decodes executed, i.e. the sum over
+    # cohorts and nodes of K * |sub-batch|. With routed sub-batches this
+    # is ~k*B*K per cohort; the legacy full fan-out paid N*B*K.
+    draft_calls: int = 0
+    # node_drafted[i]: token-decodes node i executed (its routed sub-batch
+    # sizes times the draft length, summed over cohorts + redrafts).
+    node_drafted: List[int] = field(default_factory=list)
+
+    def note_draft_work(self, node: int, n_nodes: int, n_tokens: int):
+        if len(self.node_drafted) < n_nodes:
+            self.node_drafted.extend(
+                [0] * (n_nodes - len(self.node_drafted)))
+        self.node_drafted[node] += n_tokens
+        self.draft_calls += n_tokens
 
     @property
     def sim_ms(self) -> float:
@@ -259,6 +274,7 @@ class SpeculativeEngine:
             plan = self.sched.plan(
                 cands, pipelined=self.executor is not None,
                 n_drafters=self.cfg.drafters_per_request,
+                n_nodes=len(self.drafters),
                 observation=observation, extra_ctx=extra_ctx)
             return plan.requests, plan.gammas
         batch = sorted(cands, key=lambda r: r.arrival_ms)[: self.cfg.max_batch]
@@ -283,6 +299,18 @@ class SpeculativeEngine:
         if self.strategy == "specinfer":
             return list(range(n))
         return [0]
+
+    def draft_batch(self, parts: List[List[int]], b: int) -> int:
+        """Drafting batch the analytic cost should charge: the most
+        loaded node's routed sub-batch size (the lock-step pace setter),
+        or the cohort width under the legacy full fan-out."""
+        if not self.cfg.subbatch_drafting or not parts:
+            return b
+        counts: Dict[int, int] = {}
+        for p in parts:
+            for di in p:
+                counts[di] = counts.get(di, 0) + 1
+        return max(counts.values(), default=b)
 
     def n_active(self, entries: List[DraftEntry]) -> int:
         if self.strategy == "cosine":
@@ -348,6 +376,19 @@ class SpeculativeEngine:
                      ) -> List[DraftEntry]:
         """Run the speculation cluster for one cohort (shared batch shape).
 
+        Route-faithful sub-batching (DESIGN.md §2.4): each drafter node
+        decodes only the requests routed to it. Per-node index maps
+        (`rows_of[di]` = cohort positions, in cohort order) slice the slot
+        snapshots, the teacher-forcing matrices and the K-step loop down
+        to each node's sub-batch, so drafter compute scales with
+        sum(|sub-batch|) ~= k*B — the timing `DrafterCluster.plan_cohort`
+        already charges — instead of the SpecInfer-style N*B fan-out.
+        Sub-batch shapes are bucketed by the runner (`slot_bucket`), so
+        ragged per-node sizes stay within the bounded compile set. With
+        `cfg.subbatch_drafting=False` (or specinfer, where every node is
+        routed everything) every node decodes the whole cohort — the
+        legacy full fan-out, kept token-identical (tested).
+
         teach: (N, B, n) per-drafter tokens to teacher-force into the slot
         snapshots before drafting (the optimistic context extension)."""
         B, K, N = len(batch), max(gammas), len(self.drafters)
@@ -366,26 +407,48 @@ class SpeculativeEngine:
                      or fc for p, fc in zip(parts, fuse_cand)]
         fuse = self.strategy == "cosine" and self.cfg.enable_fusion
 
-        # slot-snapshot drafting: one device-side gather per drafter; the
-        # snapshots are decoded on and then discarded (= rollback) — the
-        # slot-resident caches only advance at commit time.
-        temp = [d.speculative_caches(rids) for d in self.drafters]
+        # per-node index maps: rid -> sub-batch position is implied by
+        # cohort order, so rows_of[di][j] is the cohort row of node di's
+        # j-th sub-batch member
+        if self.cfg.subbatch_drafting:
+            active = sorted({i for p in parts for i in p})
+            rows_of = {di: np.asarray([b for b in range(B) if di in parts[b]],
+                                      np.int64) for di in active}
+        else:
+            active = list(range(N))
+            rows_of = {di: np.arange(B, dtype=np.int64) for di in active}
+
+        # slot-snapshot drafting: one device-side gather per node covering
+        # only its routed rids; the snapshots are decoded on and then
+        # discarded (= rollback) — the slot-resident caches only advance
+        # at commit time.
+        temp = {di: self.drafters[di].speculative_caches(
+            [rids[b] for b in rows_of[di]]) for di in active}
 
         prev_last = np.array([(r.generated[-1] if r.generated
                                else int(r.prompt[-1])) for r in batch],
                              np.int32)
-        if teach is None:
-            prev_per_d = [prev_last.copy() for _ in self.drafters]
-        else:
-            # drafter snapshots hold committed[:-1]; replay the last
-            # committed token plus the assumed chain (minus its tail, which
-            # becomes the next decode input) to reach the optimistic state
-            prev_per_d = []
-            for di, d in enumerate(self.drafters):
-                feed = np.concatenate([prev_last[:, None], teach[di][:, :-1]],
-                                      axis=1)
-                _, temp[di] = d.extend_snapshot(temp[di], feed)
-                prev_per_d.append(teach[di][:, -1].astype(np.int32).copy())
+        prev_node: Dict[int, np.ndarray] = {}
+        for di in active:
+            rows = rows_of[di]
+            if teach is None:
+                prev_node[di] = prev_last[rows].copy()
+            else:
+                # drafter snapshots hold committed[:-1]; replay the last
+                # committed token plus the assumed chain (minus its tail,
+                # which becomes the next decode input) to reach the
+                # optimistic state — sliced to this node's sub-batch
+                t_rows = teach[di][rows]
+                feed = np.concatenate([prev_last[rows][:, None],
+                                       t_rows[:, :-1]], axis=1)
+                _, temp[di] = self.drafters[di].extend_snapshot(temp[di],
+                                                               feed)
+                prev_node[di] = t_rows[:, -1].astype(np.int32).copy()
+
+        # drafter-compute accounting: each node pays K steps over its own
+        # sub-batch (the quantity the fig7 draft_calls column reports)
+        for di in active:
+            self.stats.note_draft_work(di, N, K * len(rows_of[di]))
 
         all_tokens = np.zeros((N, B, K), np.int32)
         all_confs = np.zeros((N, B, K), np.float32)
@@ -396,18 +459,21 @@ class SpeculativeEngine:
         for i in range(K):
             step_tokens = np.zeros((N, B), np.int32)
             step_confs = np.full((N, B), -1.0, np.float32)
-            for di, d in enumerate(self.drafters):
-                lg, temp[di] = d.decode(rids, prev_per_d[di], caches=temp[di])
+            for di in active:
+                rows = rows_of[di]
+                lg, temp[di] = self.drafters[di].decode(
+                    [rids[b] for b in rows], prev_node[di], caches=temp[di])
                 probs = jax.nn.softmax(jnp.asarray(lg), -1)
                 tok = np.asarray(jnp.argmax(probs, -1))
                 conf = np.asarray(jnp.take_along_axis(
                     probs, jnp.asarray(tok)[:, None], -1))[:, 0]
-                step_tokens[di] = tok
-                step_confs[di] = conf
+                step_tokens[di, rows] = tok
+                step_confs[di, rows] = conf
             all_tokens[:, :, i] = step_tokens
             all_confs[:, :, i] = np.maximum(step_confs, 0.0)
 
-            # confidence-based token fusion (Eq. 4) over the on-time quorum
+            # confidence-based token fusion (Eq. 4), per request over only
+            # that request's on-time participants
             fused = np.zeros(B, np.int32)
             fused_p = np.zeros(B, np.float32)
             for b in range(B):
@@ -420,23 +486,33 @@ class SpeculativeEngine:
             chain_tokens[:, i] = fused
             chain_probs[:, i] = fused_p
 
-            if fuse:
-                for di in range(N):
+            for di in active:
+                rows = rows_of[di]
+                if fuse:
                     # cut nodes are out of the per-step sync: they chain
                     # on their own proposals, not the fused token
                     if roles.get(di, "fused") == "fused":
-                        prev_per_d[di] = fused.copy()
+                        prev_node[di] = fused[rows].copy()
                     else:
-                        prev_per_d[di] = step_tokens[di].copy()
-            elif self.strategy in ("specinfer", "cosine"):
-                # independent chains (SpecInfer; CoSine w/o fusion ablation)
-                for di in range(N):
-                    prev_per_d[di] = step_tokens[di].copy()
-            else:  # single-drafter chain
-                for di in range(N):
-                    prev_per_d[di] = step_tokens[0].copy()
-            for di in range(N):
-                d_chains[di, :, i] = prev_per_d[di]
+                        prev_node[di] = step_tokens[di, rows].copy()
+                elif self.strategy in ("specinfer", "cosine"):
+                    # independent chains (SpecInfer; no-fusion ablation)
+                    prev_node[di] = step_tokens[di, rows].copy()
+                else:  # single-drafter chain
+                    prev_node[di] = step_tokens[0, rows].copy()
+                d_chains[di, rows, i] = prev_node[di]
+
+        # (node, request) pairs outside the routed sub-batches consumed no
+        # tokens; their teacher-forcing script is the fused chain — the
+        # context extension the pending commit is assumed to add — which
+        # is exactly what a fused-role node consumes under fusion, so a
+        # node joining a request's participants next cohort warms up on
+        # the assumed committed stream
+        covered = np.zeros((N, B), bool)
+        for di in active:
+            covered[di, rows_of[di]] = True
+        ni, bi = np.nonzero(~covered)
+        d_chains[ni, bi, :] = chain_tokens[bi, :]
 
         out = []
         for b, r in enumerate(batch):
@@ -548,7 +624,8 @@ class SpeculativeEngine:
     def _step_coupled(self, pending: List[Request],
                       prefill_ms: float = 0.0) -> IterationRecord:
         batch, gammas = self._plan_cohort(pending)
-        entries = self._draft_entries(batch, gammas)
+        parts = [self._participants(r) for r in batch]
+        entries = self._draft_entries(batch, gammas, parts=parts)
         committed, total_committed = self._verify_commit(entries)
 
         b = len(batch)
@@ -556,10 +633,14 @@ class SpeculativeEngine:
         gmax = max(gammas)
         big_gamma = sum(e.tree.n_nodes for e in entries)
         n_active = self.n_active(entries)
-        t_ssm = self.lat.t_ssm(b, l, gmax, n_active)
+        # drafting cost is paid on the routed sub-batches: the lock-step
+        # cluster advances at its most loaded node, not the cohort width
+        b_draft = self.draft_batch(parts, b)
+        t_ssm = self.lat.t_ssm(b_draft, l, gmax, n_active)
         t_llm = self.lat.t_llm(b, l, big_gamma)
         t_iter = self.lat.iteration_coupled(b, l, gmax, big_gamma, n_active,
-                                            prefill_ms=prefill_ms)
+                                            prefill_ms=prefill_ms,
+                                            draft_b=b_draft)
         rec = IterationRecord(
             self.clock_ms, t_iter, b, big_gamma, total_committed, n_active,
             draft_start_ms=self.clock_ms + prefill_ms, draft_ms=t_ssm,

@@ -14,8 +14,12 @@ clock). The cluster drafts cohort i+1 while the server verifies i. For
 requests whose iteration-i verification is still in flight, drafting
 proceeds *optimistically* on slot snapshots: the drafter state is
 teacher-forced over the iteration-i fused chain (assumed fully accepted)
-and the chain simply continues. When the verification lands, each
-dependent draft is reconciled against the actually committed tokens:
+and the chain simply continues. The assumption matrices (`d_chains`,
+(N, gamma) per request) are consumed per node: `_draft_group` slices
+each node's rows down to its routed sub-batch before teacher-forcing,
+and redraft cohorts re-slice against their own (freshly routed) parts.
+When the verification lands, each dependent draft is reconciled against
+the actually committed tokens:
 
   * survive — every assumed token was accepted AND the verifier's
     correction token equals the ahead-draft's first fused token; the

@@ -33,10 +33,35 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.models import model as M
 
-# small buckets (1, 2, 4) keep short prompts to O(log P) chunks instead
-# of token-at-a-time decode steps
-PREFILL_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024)
+# prefill chunk shapes: an arbitrary-length prompt streams through
+# `slot_extend` as full PREFILL_CHUNK-sized writes plus ONE final chunk
+# padded up to the next bucket with the pad masked out (token_mask), so
+# a 7-token prompt is a single masked 8-wide write instead of a 4+2+1
+# bucket decomposition — compile shapes stay bounded and the number of
+# forwards is ceil(P / PREFILL_CHUNK)
+PREFILL_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+PREFILL_CHUNK = 512
 SLOT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+
+def prefill_bucket(n: int) -> int:
+    """Smallest prefill chunk shape >= n (n <= PREFILL_CHUNK)."""
+    for b in PREFILL_BUCKETS:
+        if b >= n:
+            return b
+    return PREFILL_CHUNK
+
+
+def prefill_chunk_len(cfg: ModelConfig) -> int:
+    """Max prefill chunk width for a config. Sliding-window layers cache
+    KV in a ring of capacity window + RING_MARGIN; one scatter may only
+    span RING_MARGIN positions (real + pad) or its columns wrap onto
+    keys still inside some query's window — so windowed configs chunk at
+    the margin, full-attention ones at PREFILL_CHUNK."""
+    from repro.models.attention import RING_MARGIN
+    from repro.models.model import effective_window
+    win = effective_window(cfg)
+    return min(PREFILL_CHUNK, RING_MARGIN) if win else PREFILL_CHUNK
 
 
 def slot_bucket(n: int) -> int:
@@ -176,35 +201,38 @@ class ModelRunner:
             # the slot holds the empty context; the first decode() fills it
             return None, 0.0
         sidx = self.slots.padded_idx([rid])
+        rows = int(sidx.shape[0])
+        chunk_len = prefill_chunk_len(self.cfg)
         logits = None
         ll_sum, ll_n = 0.0, 0
         i = 0
         while i < len(toks):
-            remaining = len(toks) - i
-            chunk = 1
-            for b in PREFILL_BUCKETS:
-                if b <= remaining:
-                    chunk = b
-            seg = jnp.asarray(toks[i: i + chunk])[None, :]
-            if chunk == 1 and i > 0:
-                logits, self.slots.cache, _ = self._jit_slot_decode(
-                    self.params, tokens=seg, cache=self.slots.cache,
-                    slot_idx=sidx)
-            else:
-                logits, self.slots.cache, _ = self._jit_slot_extend(
-                    self.params, tokens=seg, cache=self.slots.cache,
-                    slot_idx=sidx)
+            n_real = min(chunk_len, len(toks) - i)
+            width = min(prefill_bucket(n_real), chunk_len)
+            if i + width > self.max_len:
+                # a padded tail would spill past the cache capacity and
+                # its ring columns could clobber live rows — fall back to
+                # an exact-width write (prompt ~ max_len; one-off shape)
+                width = n_real
+            seg = np.zeros((rows, width), np.int32)
+            seg[0, :n_real] = toks[i: i + n_real]
+            mask = np.zeros((rows, width), bool)
+            mask[0, :n_real] = True            # batch-pad rows stay masked
+            logits, self.slots.cache, _ = self._jit_slot_extend(
+                self.params, tokens=jnp.asarray(seg), cache=self.slots.cache,
+                slot_idx=sidx, token_mask=jnp.asarray(mask))
             # likelihood of the *next* tokens within this chunk
-            nxt = toks[i + 1: i + chunk]
+            nxt = toks[i + 1: i + n_real]
             if len(nxt):
                 lp = jax.nn.log_softmax(
                     logits[0, : len(nxt), : self.cfg.vocab], -1)
                 ll_sum += float(jnp.take_along_axis(
                     lp, jnp.asarray(nxt)[:, None], -1).sum())
                 ll_n += len(nxt)
-            i += chunk
+            i += n_real
         mean_ll = ll_sum / max(ll_n, 1)
-        return np.asarray(logits[0, -1, : self.cfg.vocab]), mean_ll
+        # n_real is the final chunk's real-token count after the loop
+        return np.asarray(logits[0, n_real - 1, : self.cfg.vocab]), mean_ll
 
     def drop(self, rid: int):
         self.slots.release(rid)

@@ -10,6 +10,7 @@ import numpy as np
 import pytest
 
 from conftest import TINY_MAX_LEN as MAX_LEN, tiny_model_cfg as _tiny
+from repro.config import ModelConfig
 from repro.models import model as M
 from repro.serving.runner import ModelRunner, SlotCacheManager, slot_bucket
 
@@ -271,25 +272,104 @@ def test_speculative_snapshot_rollback_after_inplace_steps(pair):
     np.testing.assert_allclose(lg[0], ref.decode(0, nxt), atol=ATOL)
 
 
-def test_short_prompt_prefill_uses_small_buckets():
-    """A 7-token prompt must prefill as 4+2+1 bucketed chunks, not seven
-    single-token steps (PREFILL_BUCKETS starts at 1 now)."""
+def test_short_prompt_prefill_single_padded_chunk():
+    """A 7-token prompt must prefill as ONE pad-and-mask slot_extend of
+    bucket width 8 (chunked write-through, no 4+2+1 bucket loop) and the
+    slot length must count only the real tokens."""
     cfg = _tiny("attn")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     runner = ModelRunner(cfg, params, max_len=MAX_LEN)
     calls = []
-    orig_e, orig_d = runner._jit_slot_extend, runner._jit_slot_decode
+    orig_e = runner._jit_slot_extend
     runner._jit_slot_extend = lambda *a, **k: (
         calls.append(int(k["tokens"].shape[1])) or orig_e(*a, **k))
-    runner._jit_slot_decode = lambda *a, **k: (
-        calls.append(1) or orig_d(*a, **k))
     rng = np.random.default_rng(3)
     toks = rng.integers(0, cfg.vocab, 7)
     lg, _ = runner.prefill_request(0, toks)
-    assert calls == [4, 2, 1]
+    assert calls == [8]
     ref = PerRequestReference(cfg, params)
     np.testing.assert_allclose(lg, ref.prefill(0, toks), atol=ATOL)
     assert runner.length(0) == 7
+
+
+def _tiny_exotic(kind):
+    """MLA / sliding-window tiny variants: the pad-and-mask write path
+    must hold for the latent cache and the ring cache too."""
+    from repro.config import MLAConfig
+    common = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  head_dim=16, d_ff=128, vocab=50, tie_embeddings=True,
+                  dtype="float32")
+    if kind == "mla":
+        return ModelConfig(name="tiny-mla", family="dense", attention="mla",
+                           mla=MLAConfig(q_lora_rank=32, kv_lora_rank=32,
+                                         qk_nope_head_dim=16,
+                                         qk_rope_head_dim=8, v_head_dim=16),
+                           **common)
+    return ModelConfig(name="tiny-swa", family="dense", attention="swa",
+                       sliding_window=16, **common)
+
+
+@pytest.mark.parametrize("kind", ["mla", "swa"])
+def test_padded_chunk_prefill_exotic_attention(kind):
+    cfg = _tiny_exotic(kind)
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    runner = ModelRunner(cfg, params, max_len=MAX_LEN)
+    ref = PerRequestReference(cfg, params)
+    rng = np.random.default_rng(13)
+    toks = rng.integers(0, cfg.vocab, 13)        # pads 13 -> 16
+    lg, _ = runner.prefill_request(0, toks)
+    np.testing.assert_allclose(lg, ref.prefill(0, toks), atol=ATOL)
+    for t in rng.integers(0, cfg.vocab, 3):
+        lg, _ = runner.decode([0], np.asarray([t]))
+        np.testing.assert_allclose(lg[0], ref.decode(0, int(t)), atol=ATOL)
+
+
+def test_padded_chunk_prefill_swa_prompt_past_ring_capacity():
+    """A windowed config chunks prefill at RING_MARGIN: a prompt longer
+    than the ring capacity (window + margin) must still be exact — a
+    wider padded chunk would scatter pad columns onto keys still inside
+    some query's window (regression: 300-token prompt, window 16)."""
+    import jax.numpy as jnp
+    cfg = _tiny_exotic("swa")                    # window 16, capacity 144
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    runner = ModelRunner(cfg, params, max_len=512)
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, cfg.vocab, 300)
+    lg, _ = runner.prefill_request(0, toks)
+    cache = M.init_cache(cfg, 1, 512, dtype=jnp.float32)
+    rlg, cache, _ = M.prefill(params, cfg, jnp.asarray(toks)[None], cache)
+    np.testing.assert_allclose(lg, np.asarray(rlg[0, -1, :cfg.vocab]),
+                               atol=ATOL)
+    for t in rng.integers(0, cfg.vocab, 3):
+        dl, _ = runner.decode([0], np.asarray([int(t)]))
+        rl, cache, _ = M.decode_step(params, cfg, jnp.asarray([[int(t)]]),
+                                     cache)
+        np.testing.assert_allclose(dl[0], np.asarray(rl[0, 0, :cfg.vocab]),
+                                   atol=ATOL)
+
+
+@pytest.mark.parametrize("kind", ["attn", "ssm", "hybrid"])
+@pytest.mark.parametrize("n", [1, 5, 8, 13])
+def test_padded_chunk_prefill_matches_reference(kind, n):
+    """Pad-and-mask prefill must be invisible: logits at the last real
+    position and every subsequent decode step match the per-request
+    reference exactly for attention KV, SSM recurrent/conv state and the
+    hybrid mix (the masked tail writes nothing a read can see)."""
+    cfg = _tiny(kind)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    runner = ModelRunner(cfg, params, max_len=MAX_LEN)
+    ref = PerRequestReference(cfg, params)
+    rng = np.random.default_rng(7 + n)
+    toks = rng.integers(0, cfg.vocab, n)
+    lg, _ = runner.prefill_request(0, toks)
+    np.testing.assert_allclose(lg, ref.prefill(0, toks), atol=ATOL)
+    assert runner.length(0) == n
+    # decoding after a masked prefill keeps matching: the pad rows were
+    # never read and the next tokens overwrite their columns
+    for t in rng.integers(0, cfg.vocab, 4):
+        lg, _ = runner.decode([0], np.asarray([t]))
+        np.testing.assert_allclose(lg[0], ref.decode(0, int(t)), atol=ATOL)
+    assert runner.length(0) == n + 4
 
 
 def test_slot_bucket_clamps_to_pow2():

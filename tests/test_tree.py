@@ -29,6 +29,20 @@ def test_build_tree_dedups_fused_token():
         assert t.parent[i] == t.depth[i] - 1
 
 
+def test_build_tree_skips_masked_side_columns():
+    """A masked column (prob < 0: non-participant drafter / dropped
+    chain) must contribute no side branch, even when the depth has fewer
+    than tree_width real candidates — its token is not a proposal."""
+    side_t = np.array([[9, 42], [6, 0]])
+    side_p = np.array([[0.9, -1.0], [0.7, -1.0]])   # column 1 masked
+    side_d = np.array([[0, 1], [0, 1]])
+    t = build_tree(np.array([5, 6]), np.array([0.5, 0.5]),
+                   side_t, side_p, side_d, tree_width=2)
+    assert 42 not in t.tokens.tolist() and 0 not in t.tokens.tolist()
+    assert sorted(t.tokens.tolist()) == [5, 6, 9]   # 6 deduped at depth 1
+    assert all(p >= 0 for p in t.prob.tolist())
+
+
 def test_accept_tree_walks_main_chain():
     t = chain_tree([5, 6, 7])
     node_argmax = np.array([6, 7, 9])   # after 5 target wants 6, etc.
