@@ -12,6 +12,11 @@ are runner-dependent noise and are reported but never gated):
   * vutil       -- verifier utilization: fail if it drops more than 15%
   * draft_calls -- drafter token-decodes: fail if it rises more than 15%
                    (sub-batched drafting regressing toward full fan-out)
+  * goodput_slo -- within-SLO tokens/s (traffic rows): fail on a >15% drop
+  * p99         -- tail latency (traffic rows): fail on a >25% rise
+  * accounted / lossless -- zero-tolerance overload invariants: every
+                   submitted request completed-or-shed, surviving streams
+                   bit-identical to the target's greedy reference
 
 A row present in the baseline but missing from the fresh run (or present
 but ERROR) fails the gate: lost coverage is a regression too. New rows
@@ -37,15 +42,31 @@ GATES = {
     # Route-faithful sub-batching keeps this at ~k*B*gamma per cohort; a
     # >15% rise means drafting regressed toward the N*B full fan-out
     "draft_calls": ("up", 0.15),
+    # --- traffic/SLO rows (benchmarks/traffic.py) ---
+    # within-SLO committed tokens per simulated second: the quantity
+    # admission control protects; a drop means SLO-serving regressed
+    "goodput_slo": ("down", 0.15),
+    # tail latency under the trace (looser: the tail is the noisiest
+    # deterministic metric — a single reordered completion moves it)
+    "p99": ("up", 0.25),
+    # hard invariants, zero tolerance: every submitted request must be
+    # completed-or-shed (never stranded/half-committed), and surviving
+    # streams must match the target's greedy reference exactly
+    "accounted": ("down", 0.0),
+    "lossless": ("down", 0.0),
 }
 # reported in the delta table but never gated (noisy or informational)
 REPORT_ONLY = (
+    "p50",
     "p95",
     "ttft_ms",
     "bubble_ms",
     "invalidated",
     "side",
     "dropped",
+    "slo_frac",
+    "n_shed",
+    "n_preempted",
 )
 ROW_FMT = "{:<36} {:<12} {:>10} {:>10} {:>8}  {}"
 
@@ -75,12 +96,16 @@ def load_rows(path: str) -> dict:
 
 
 def compare(fresh: dict, base: dict, prefix: str):
-    """Returns (table_lines, failure_messages, new_row_names)."""
+    """Returns (table_lines, failure_messages, new_row_names).
+
+    prefix may be comma-separated ("fig7,traffic"): a row is gated when
+    its name starts with any of the prefixes."""
+    prefixes = tuple(p for p in prefix.split(",") if p)
     failures = []
     lines = [ROW_FMT.format("row", "metric", "base", "fresh", "delta", "verdict")]
     lines.append("-" * len(lines[0]))
     for name, brow in sorted(base.items()):
-        if not name.startswith(prefix):
+        if not name.startswith(prefixes):
             continue
         if brow["derived"].startswith("ERROR"):
             # an ERROR baseline row would silently skip every metric:
@@ -127,7 +152,7 @@ def compare(fresh: dict, base: dict, prefix: str):
                     failures.append(f"{name}.{metric}: {msg}")
             row = ROW_FMT.format(name, metric, f"{bv:.3f}", f"{fv:.3f}", f"{delta:+.1%}", verdict)
             lines.append(row)
-    new_rows = sorted(n for n in fresh if n not in base and n.startswith(prefix))
+    new_rows = sorted(n for n in fresh if n not in base and n.startswith(prefixes))
     return lines, failures, new_rows
 
 
@@ -137,8 +162,8 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", required=True, help="checked-in baseline JSON")
     ap.add_argument(
         "--prefix",
-        default="fig7",
-        help="only gate rows with this name prefix (kernel wall-times are machine noise)",
+        default="fig7,traffic",
+        help="comma-separated name prefixes to gate (kernel wall-times are noise)",
     )
     args = ap.parse_args(argv)
 

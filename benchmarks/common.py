@@ -87,6 +87,33 @@ def build_fixture(steps_target: int = 500, steps_drafter: int = 300,
                    vocab=VOCAB)
 
 
+def completion_stats(completed) -> dict:
+    """Latency statistics over a list of completed `Request`s, hardened
+    against zero-token completions.
+
+    A request that was shed — or preempted and then finished with no
+    committed tokens (e.g. max_new_tokens hit exactly at re-admission)
+    — has `generated == []` and `first_token_ms == -1`. Those must not
+    crash the per-token division or skew the percentiles with bogus
+    0-length latencies / negative TTFTs: they simply contribute no
+    latency sample (they are accounted separately as shed/goodput loss).
+    """
+    import numpy as np
+    lat = [(r.finish_ms - r.arrival_ms) / len(r.generated)
+           for r in completed if r.generated]
+    ttft = [r.first_token_ms - r.arrival_ms for r in completed
+            if r.generated and r.first_token_ms >= 0.0]
+
+    def pct(q):
+        return float(np.percentile(lat, q)) if lat else 0.0
+
+    return dict(
+        ms_per_tok=float(np.mean(lat)) if lat else 0.0,
+        p50=pct(50), p95=pct(95), p99=pct(99),
+        ttft=float(np.mean(ttft)) if ttft else 0.0,
+        n_zero_tok=sum(1 for r in completed if not r.generated))
+
+
 def bench_line(name: str, us_per_call: float, derived: str = "") -> str:
     """The required CSV format: name,us_per_call,derived."""
     return f"{name},{us_per_call:.1f},{derived}"

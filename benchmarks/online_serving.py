@@ -27,6 +27,7 @@ import time
 
 import numpy as np
 
+from benchmarks.common import completion_stats
 from repro.core.latency_model import DrafterProfile
 
 
@@ -60,9 +61,7 @@ def serve_online(fixture, strategy: str, mode: str, n_requests: int = 10,
         if eng.step() is None:
             break
         iter_wall_s.append(time.perf_counter() - t0)
-    lat = [(r.finish_ms - r.arrival_ms) / max(len(r.generated), 1)
-           for r in eng.pool.completed]
-    ttft = [r.first_token_ms - r.arrival_ms for r in eng.pool.completed]
+    cstats = completion_stats(eng.pool.completed)
     stats = eng.stats
     dutil = dlate = ""
     n_side = n_dropped = 0
@@ -76,9 +75,9 @@ def serve_online(fixture, strategy: str, mode: str, n_requests: int = 10,
     # vs the SpecInfer-style N*B*gamma full fan-out); dtoks is the
     # per-node split of the same count
     return dict(
-        ms_per_tok=float(np.mean(lat)),
-        p95=float(np.percentile(lat, 95)),
-        ttft=float(np.mean(ttft)),
+        ms_per_tok=cstats["ms_per_tok"],
+        p95=cstats["p95"],
+        ttft=cstats["ttft"],
         wall_iter_us=float(np.median(iter_wall_s)) * 1e6 if iter_wall_s
         else 0.0,
         vutil=float(stats.verifier_utilization),

@@ -262,6 +262,40 @@ class CoSineConfig:
     max_batch: int = 16
     # adaptive speculation (Alg. 2)
     min_gamma: int = 1
+    gamma_max: int = 16            # hard per-request draft-length ceiling
+    #                                (balance_gamma / feedback growth cap)
+    # lambda feedback conditioning (scheduler.effective_lam): the
+    # observation multipliers (queue pressure, starved verifier, hot
+    # drafter) compose multiplicatively; the composed multiplier is
+    # clamped to [lam_mult_min, lam_mult_max] so feedback can never
+    # drive the effective lambda to extremes, and a deadband around the
+    # busy-fraction thresholds keeps it from oscillating when a stage
+    # hovers at its setpoint
+    lam_mult_min: float = 0.25
+    lam_mult_max: float = 8.0
+    lam_deadband: float = 0.05
+    # backlog aging (starvation freedom): each ms a request has waited
+    # shrinks its effective context length by this many tokens in the
+    # scheduler's sort key, so long-context requests age past the
+    # candidate bound instead of starving behind a stream of short ones
+    age_tok_per_ms: float = 0.05
+    # priority classes: smaller is more urgent (0 = high, 1 = normal,
+    # 2 = low); a class step is worth this much queue age in the sort key
+    priority_age_bonus_ms: float = 2000.0
+    # --- SLO-aware admission control (DESIGN.md §2.5) ---
+    enable_admission: bool = False
+    default_slo_ms: float = float("inf")  # per-request deadline budget
+    #                                       (deadline = arrival + slo)
+    admit_queue_cap: int = 0       # >0: max cold backlog under saturation
+    #                                before the overflow is shed
+    shed_when_late: bool = True    # shed queued zero-token requests that
+    #                                can no longer meet their deadline
+    #                                (only while the verifier saturates)
+    preempt_priority: bool = True  # urgent arrivals evict the slots of
+    #                                lower-priority in-flight requests
+    #                                (slot evict / re-admit path)
+    slo_trim: bool = True          # SpecServe-style per-request gamma
+    #                                trimming when SLO headroom shrinks
     # multi-node drafter cluster (DESIGN.md §2.4)
     cut_pace_slack: float = 1.6    # fused lock-step window vs fastest node
     straggler_grace_frac: float = 0.25  # grace (frac of fused draft time)

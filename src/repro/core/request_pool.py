@@ -20,6 +20,9 @@ class Request:
     max_new_tokens: int
     domain: Optional[str] = None          # ground-truth domain (for eval only)
     arrival_ms: float = 0.0
+    # --- SLO / admission (DESIGN.md §2.5) ---
+    deadline_ms: float = float("inf")     # absolute SLO deadline
+    priority: int = 1                     # class: 0 high, 1 normal, 2 low
     # --- mutable serving state ---
     generated: List[int] = field(default_factory=list)
     gamma: int = 4                        # current per-request draft length
@@ -27,6 +30,8 @@ class Request:
     done: bool = False
     finish_ms: float = 0.0
     first_token_ms: float = -1.0
+    shed_ms: float = -1.0                 # >= 0 once admission shed it
+    n_preemptions: int = 0                # slot evictions by admission
     n_iterations: int = 0
     n_accepted_total: int = 0
     n_drafted_total: int = 0
@@ -34,6 +39,20 @@ class Request:
     @property
     def context_len(self) -> int:
         return len(self.prompt) + len(self.generated)
+
+    @property
+    def was_shed(self) -> bool:
+        return self.shed_ms >= 0.0
+
+    @property
+    def slo_met(self) -> bool:
+        """Finished within its deadline (shed requests never meet it)."""
+        return self.done and not self.was_shed \
+            and self.finish_ms <= self.deadline_ms
+
+    def headroom_ms(self, now_ms: float) -> float:
+        """Remaining SLO budget (inf when no deadline was set)."""
+        return self.deadline_ms - now_ms
 
     def record_acceptance(self, n_committed: int, gamma_used: int):
         self.n_iterations += 1
@@ -47,15 +66,23 @@ class RequestPool:
         self._requests: Dict[int, Request] = {}
         self._ids = itertools.count()
         self.completed: List[Request] = []
+        self.shed: List[Request] = []
+        self.n_submitted = 0
 
     def add(self, prompt, max_new_tokens: int, domain=None,
-            arrival_ms: float = 0.0) -> Request:
+            arrival_ms: float = 0.0, deadline_ms: float = float("inf"),
+            priority: int = 1) -> Request:
         rid = next(self._ids)
         r = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
                     max_new_tokens=max_new_tokens, domain=domain,
-                    arrival_ms=arrival_ms)
+                    arrival_ms=arrival_ms, deadline_ms=deadline_ms,
+                    priority=priority)
         self._requests[rid] = r
+        self.n_submitted += 1
         return r
+
+    def get(self, rid: int) -> Optional[Request]:
+        return self._requests.get(rid)
 
     def pending(self, now_ms: float = float("inf")) -> List[Request]:
         return [r for r in self._requests.values()
@@ -66,6 +93,19 @@ class RequestPool:
         r.done = True
         r.finish_ms = now_ms
         self.completed.append(r)
+
+    def shed_request(self, rid: int, now_ms: float) -> Request:
+        """Admission rejected the request: it leaves the pool whole —
+        never half-committed (admission only sheds zero-token requests)
+        — and is accounted on the `shed` list, so
+        n_submitted == len(completed) + len(shed) + len(pool) always."""
+        r = self._requests.pop(rid)
+        assert not r.generated, "shedding a half-committed request"
+        r.done = True
+        r.shed_ms = now_ms
+        r.finish_ms = now_ms
+        self.shed.append(r)
+        return r
 
     def __len__(self):
         return len(self._requests)

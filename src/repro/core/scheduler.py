@@ -49,6 +49,18 @@ class PipelineObservation:
     backlog: int = 0
     drafter_busy_fracs: Tuple[float, ...] = ()
     drafter_wait_fracs: Tuple[float, ...] = ()
+    # drafting can no longer cover verification even at the per-request
+    # gamma ceiling (balance_gamma hit cfg.gamma_max): the pipeline is
+    # verify-bound no matter how much is drafted, so feedback must not
+    # discount lambda to "draft more"
+    spec_saturated: bool = False
+
+    @property
+    def saturated(self) -> bool:
+        """Verifier saturation signal the admission layer keys on:
+        drafted work already queued at the server, or the verify stage
+        essentially never idle."""
+        return self.queue_depth > 0 or self.verify_busy_frac > 0.95
 
     @property
     def hottest_drafter_frac(self) -> float:
@@ -95,31 +107,110 @@ class RequestScheduler:
         self.cfg = cfg
         self.lat = lat
         self.mem_per_token = mem_per_token_bytes
+        # set by balance_gamma: drafting cannot cover verification even
+        # at cfg.gamma_max (surfaced via PipelineObservation)
+        self.spec_saturated = False
 
     def balance_gamma(self, b: int, l: int, n_drafters: int = 1) -> int:
         """Pipeline-balancing draft length: smallest gamma whose drafting
         time covers the verification time (keeps the verifier busy without
-        over-drafting — the adaptive speculation control signal)."""
-        for gamma in range(1, 64):
+        over-drafting — the adaptive speculation control signal).
+
+        Capped at cfg.gamma_max: when drafting never covers verification
+        (a fast cluster against a slow server) there is no balancing
+        gamma, and over-drafting past the per-request ceiling would only
+        inflate verification volume. The condition is remembered as
+        `spec_saturated` and surfaced through `PipelineObservation` so
+        feedback stops discounting lambda to "draft more"."""
+        g_cap = max(self.cfg.gamma_max, self.cfg.min_gamma)
+        for gamma in range(1, g_cap + 1):
             t_d = self.lat.t_ssm(b, l, gamma, n_drafters)
             t_v = self.lat.t_llm(b, l, b * gamma)
             if t_d >= t_v:
+                self.spec_saturated = False
                 return gamma
-        return 64
+        self.spec_saturated = True
+        return g_cap
+
+    def effective_lam(self, observation: Optional[PipelineObservation]
+                      ) -> float:
+        """Observation-conditioned lambda for Eq. (8).
+
+        Queue pressure raises it (trim speculation when drafted work is
+        already waiting on the verifier); a starved verifier lowers it —
+        but only while the backlog is shallow: with more waiting requests
+        than a batch can hold, extra speculation per request would just
+        delay them. A saturated (or chronically queued) drafter node
+        while the verifier has slack means drafting is the bottleneck,
+        so speculation is trimmed. The composed multiplier is clamped to
+        [lam_mult_min, lam_mult_max] — the raw multipliers compose
+        multiplicatively and would otherwise run away when both stages
+        saturate — and a deadband below each busy-fraction threshold
+        keeps the signal from flapping when a stage hovers at its
+        setpoint."""
+        cfg = self.cfg
+        if observation is None:
+            return cfg.lam
+        dead = cfg.lam_deadband
+        mult = 1.0 + observation.queue_depth
+        if observation.verify_busy_frac < 0.8 - dead \
+                and observation.backlog <= cfg.max_batch \
+                and not observation.spec_saturated:
+            mult *= 0.5                      # verifier starved: draft more
+        if (observation.hottest_drafter_frac > 0.95
+                or observation.max_drafter_wait_frac > 0.2) \
+                and observation.verify_busy_frac < 0.95 - dead:
+            mult *= 2.0                      # drafting is the bottleneck
+        mult = min(max(mult, cfg.lam_mult_min), cfg.lam_mult_max)
+        return cfg.lam * mult
+
+    def slo_gamma(self, r: Request, now_ms: float,
+                  pipelined: bool = True) -> int:
+        """SpecServe-style per-request speculation trimming: the draft
+        length an SLO-constrained request should run this iteration.
+
+        With ample headroom this is just the request's adaptive gamma
+        (capped at cfg.gamma_max). As the deadline approaches, the
+        per-token latency budget shrinks; speculation deeper than the
+        budget allows only adds drafting time ahead of each commit, so
+        gamma is walked down until the estimated iteration time per
+        committed token fits the remaining budget (never below
+        min_gamma — an overdue request still speculates minimally)."""
+        cfg = self.cfg
+        g = min(r.gamma, cfg.gamma_max)
+        # trimming never *raises* gamma — a request already below
+        # min_gamma keeps its own value (plan must not exceed it)
+        floor = min(cfg.min_gamma, g)
+        if not cfg.slo_trim or r.deadline_ms == float("inf"):
+            return g
+        headroom = r.headroom_ms(now_ms)
+        if headroom <= 0.0:
+            return floor
+        remaining = max(r.max_new_tokens - len(r.generated), 1)
+        budget_per_tok = headroom / remaining
+        l = r.context_len
+        exp_acc = max(r.l_acc_ema, 1.0)
+
+        def ms_per_tok(g_: int) -> float:
+            t_d = self.lat.t_ssm(1, l, g_) + self.lat.comm_ms
+            t_v = self.lat.t_llm(1, l, g_)
+            t_it = max(t_d, t_v) if pipelined else t_d + t_v
+            # acceptance is bounded by the draft length (+1 correction)
+            return t_it / min(exp_acc + 1.0, g_ + 1.0)
+
+        while g > floor and ms_per_tok(g) > budget_per_tok:
+            g -= 1
+        return g
 
     def plan(self, requests: Sequence[Request], pipelined: bool = True,
              n_drafters: int = 1, n_nodes: int = 0,
              observation: Optional[PipelineObservation] = None,
-             extra_ctx: Optional[Dict[int, int]] = None) -> BatchPlan:
-        """Solve Eq. (8) over length-sorted prefixes.
+             extra_ctx: Optional[Dict[int, int]] = None,
+             now_ms: float = 0.0) -> BatchPlan:
+        """Solve Eq. (8) over aged-length-sorted prefixes.
 
-        observation: measured pipeline state; queue pressure raises the
-          effective lambda (trim speculation when drafted work is already
-          waiting on the verifier). A starved verifier lowers it — but
-          only while the backlog is shallow: with more waiting requests
-          than a batch can hold, extra speculation per request would just
-          delay them, and the objective's t_ttl/b term should drive wider
-          batches instead.
+        observation: measured pipeline state, folded into the effective
+          lambda (see `effective_lam`).
         n_nodes: cluster size. With route-faithful sub-batching each of
           the n_nodes drafters decodes only its routed share, so the
           drafting estimate charges the expected per-node sub-batch
@@ -128,37 +219,40 @@ class RequestScheduler:
           track the occupancy the hot-node trim acts on.
         extra_ctx: rid -> extra context tokens assumed beyond the
           committed state (draft-ahead plans against optimistic lengths).
+        now_ms: planning time, for queue-age aging and SLO headroom.
+          Candidates are ordered by *effective* length — context length
+          minus an aging credit (age_tok_per_ms per waited ms, plus a
+          priority-class bonus) — so a long-context request that has
+          waited long enough sorts ahead of fresh short ones and cannot
+          starve behind the 4*max_batch candidate bound (and, since the
+          batch prefixes follow the same order, cannot be starved by the
+          objective either). The critical length fed to the latency
+          model stays the *real* max context of the batch.
         """
         cfg = self.cfg
-        lam = cfg.lam
-        if observation is not None:
-            lam *= 1.0 + observation.queue_depth
-            if observation.verify_busy_frac < 0.8 \
-                    and observation.backlog <= cfg.max_batch:
-                lam *= 0.5                      # verifier starved: draft more
-            if (observation.hottest_drafter_frac > 0.95
-                    or observation.max_drafter_wait_frac > 0.2) \
-                    and observation.verify_busy_frac < 0.95:
-                # a saturated (or chronically queued) drafter node while
-                # the verifier has slack means drafting is the
-                # bottleneck: extra speculation only lengthens the
-                # lock-step draft phase, so trim it
-                lam *= 2.0
+        lam = self.effective_lam(observation)
         ctx_of = (lambda r: r.context_len + (extra_ctx or {}).get(r.rid, 0))
+
+        def aged_len(r: Request) -> float:
+            age = max(now_ms - r.arrival_ms, 0.0) \
+                + cfg.priority_age_bonus_ms * (1 - r.priority)
+            return ctx_of(r) - cfg.age_tok_per_ms * age
 
         def draft_b(b: int) -> int:
             if n_nodes > 1 and cfg.subbatch_drafting:
                 return max(1, -(-b * min(n_drafters, n_nodes) // n_nodes))
             return b
 
-        cand = sorted(requests, key=lambda r: (ctx_of(r), r.arrival_ms))
+        cand = sorted(requests,
+                      key=lambda r: (aged_len(r), r.arrival_ms, r.rid))
         cand = cand[: 4 * cfg.max_batch]          # bound the search
         best: BatchPlan | None = None
         for b in range(1, min(len(cand), cfg.max_batch) + 1):
             sel = cand[:b]
             l = max(ctx_of(r) for r in sel)
-            gam = adaptive_speculation([r.gamma for r in sel],
-                                       cfg.gamma_max_total, cfg.min_gamma)
+            gam = adaptive_speculation(
+                [self.slo_gamma(r, now_ms, pipelined) for r in sel],
+                cfg.gamma_max_total, cfg.min_gamma)
             big_g = sum(gam)
             t_ssm = self.lat.t_ssm(draft_b(b), l, max(gam), n_drafters)
             t_llm = self.lat.t_llm(b, l, big_g)
@@ -177,7 +271,9 @@ class RequestScheduler:
                 best = plan
         if best is None and cand:   # SLO-infeasible: serve the shortest alone
             r = cand[0]
-            g = [max(self.cfg.min_gamma, min(r.gamma, self.cfg.gamma_max_total))]
+            g = [max(self.cfg.min_gamma,
+                     min(r.gamma, self.cfg.gamma_max,
+                         self.cfg.gamma_max_total))]
             t_ssm = self.lat.t_ssm(draft_b(1), ctx_of(r), g[0], n_drafters)
             t_llm = self.lat.t_llm(1, ctx_of(r), g[0])
             best = BatchPlan([r], g, t_ssm, t_llm,
@@ -195,6 +291,6 @@ class RequestScheduler:
         timeline, not derived from the latency formulas. The coupled
         baselines still pass their analytic t_llm/t_iter ratio."""
         if verifier_busy_frac < 0.8 and n_committed >= request.gamma:
-            request.gamma = min(request.gamma + 1, 16)
+            request.gamma = min(request.gamma + 1, self.cfg.gamma_max)
         elif verifier_busy_frac > 1.2 or n_committed <= 1:
             request.gamma = max(request.gamma - 1, self.cfg.min_gamma)

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.config import CoSineConfig, ModelConfig
 from repro.core import tree as tree_mod
+from repro.core.admission import AdmissionController
 from repro.core.latency_model import (DrafterProfile, LatencyModel,
                                       homogeneous_profiles)
 from repro.core.request_pool import Request, RequestPool
@@ -96,6 +97,9 @@ class ServeStats:
     records: List[IterationRecord] = field(default_factory=list)
     total_committed: int = 0
     total_drafted: int = 0
+    # --- admission-control outcomes (DESIGN.md §2.5) ---
+    n_shed: int = 0                      # requests rejected by admission
+    n_preempted: int = 0                 # slot evictions (priority)
     # --- route-faithful drafting compute (DESIGN.md §2.4) ---
     # draft_calls: total drafter token-decodes executed, i.e. the sum over
     # cohorts and nodes of K * |sub-batch|. With routed sub-batches this
@@ -217,6 +221,8 @@ class SpeculativeEngine:
         self.router = AdaptiveRouter(len(self.drafters), cosine,
                                      self.target.embed_np, seed)
         self.sched = RequestScheduler(cosine, self.lat)
+        self.admission = (AdmissionController(cosine, self.lat)
+                          if cosine.enable_admission else None)
         self.stats = ServeStats()
         self.clock_ms = 0.0
         self.entry_logits: Dict[int, np.ndarray] = {}
@@ -240,11 +246,73 @@ class SpeculativeEngine:
 
     # ------------------------------------------------------------ requests
     def submit(self, prompt, max_new_tokens: int = 32, domain=None,
-               arrival_ms: float = 0.0) -> Request:
-        r = self.pool.add(prompt, max_new_tokens, domain, arrival_ms)
+               arrival_ms: float = 0.0, priority: int = 1,
+               slo_ms: Optional[float] = None) -> Request:
+        """slo_ms: per-request latency budget (deadline = arrival + slo);
+        defaults to cfg.default_slo_ms. priority: class (0 high, 1
+        normal, 2 low) consumed by the scheduler's aging credit and the
+        admission layer's shed/preempt ordering."""
+        budget = self.cfg.default_slo_ms if slo_ms is None else slo_ms
+        r = self.pool.add(prompt, max_new_tokens, domain, arrival_ms,
+                          deadline_ms=arrival_ms + budget,
+                          priority=priority)
         r.gamma = self.cfg.draft_len
         self.avail_ms[r.rid] = arrival_ms
         return r
+
+    # ----------------------------------------------------------- admission
+    def _shed(self, r: Request, now_ms: float):
+        """Admission rejected `r`: account it and release any state it
+        held. Only zero-token requests are ever shed (the pool asserts),
+        so nothing half-committed can leak out."""
+        self.pool.shed_request(r.rid, now_ms)
+        self.stats.n_shed += 1
+        if r.rid in self.entry_logits:
+            self.target.drop(r.rid)
+            for d in self.drafters:
+                d.drop(r.rid)
+            self.entry_logits.pop(r.rid, None)
+        self.avail_ms.pop(r.rid, None)
+        self.router.drop(r.rid)
+
+    def _preempt(self, r: Request):
+        """Evict a lower-priority request's slots (admission preemption).
+        Its committed stream stays intact in the pool; re-admission goes
+        through `_ensure_prefilled`, which re-prefills prompt+generated
+        (paying that prefill on the verify stage) — the cheap slot
+        evict/re-admit path."""
+        self.target.drop(r.rid)
+        for d in self.drafters:
+            d.drop(r.rid)
+        self.entry_logits.pop(r.rid, None)
+        r.n_preemptions += 1
+        self.stats.n_preempted += 1
+
+    def _apply_admission(self, cands: List[Request], now_ms: float,
+                         observation: Optional[PipelineObservation],
+                         inflight_rids=frozenset(),
+                         pipe_empty: bool = False) -> List[Request]:
+        """Run the admission layer over the cohort candidates. Requests
+        in the in-flight verification cohort are auto-admitted (their
+        commit is imminent — shedding or preempting them would
+        half-commit a stream); everything else may be queued, shed, or
+        trigger a priority preemption."""
+        if self.admission is None:
+            return cands
+        auto = [r for r in cands if r.rid in inflight_rids]
+        rest = [r for r in cands if r.rid not in inflight_rids]
+        active = [r for r in self.pool.pending(float("inf"))
+                  if r.rid in self.entry_logits
+                  and r.rid not in inflight_rids]
+        dec = self.admission.decide(
+            rest, now_ms, observation=observation, active=active,
+            n_protected=len(inflight_rids), pipe_empty=pipe_empty)
+        for r in dec.shed:
+            self._shed(r, now_ms)
+        preempted = {r.rid for r in dec.preempt}
+        for r in dec.preempt:
+            self._preempt(r)
+        return auto + [r for r in dec.admit if r.rid not in preempted]
 
     def _ensure_prefilled(self, r: Request):
         if r.rid in self.entry_logits:
@@ -267,7 +335,8 @@ class SpeculativeEngine:
     # ------------------------------------------------------------ planning
     def _plan_cohort(self, cands: List[Request],
                      observation: Optional[PipelineObservation] = None,
-                     extra_ctx: Optional[Dict[int, int]] = None):
+                     extra_ctx: Optional[Dict[int, int]] = None,
+                     now_ms: float = 0.0):
         """Pick (batch, gammas) for one iteration. cosine solves Eq. (8);
         the baselines batch FIFO with a fixed draft length."""
         if self.strategy == "cosine":
@@ -275,7 +344,8 @@ class SpeculativeEngine:
                 cands, pipelined=self.executor is not None,
                 n_drafters=self.cfg.drafters_per_request,
                 n_nodes=len(self.drafters),
-                observation=observation, extra_ctx=extra_ctx)
+                observation=observation, extra_ctx=extra_ctx,
+                now_ms=now_ms)
             return plan.requests, plan.gammas
         batch = sorted(cands, key=lambda r: r.arrival_ms)[: self.cfg.max_batch]
         return batch, [self.cfg.draft_len] * len(batch)
@@ -609,6 +679,20 @@ class SpeculativeEngine:
             self.clock_ms = min(future)   # idle until next arrival
             pending = self.pool.pending(self.clock_ms)
 
+        # admission (coupled path): the synchronous engine has no event
+        # timeline, so saturation is proxied by the backlog exceeding
+        # what one batch can hold
+        if self.admission is not None:
+            obs = PipelineObservation(
+                queue_depth=1 if len(pending) > self.cfg.max_batch else 0,
+                backlog=len(pending))
+            pending = self._apply_admission(
+                pending, self.clock_ms, obs,
+                pipe_empty=not self.stats.records)
+            if not pending:
+                return self.step() if self.pool.pending(float("inf")) \
+                    else None
+
         # cold requests pay their prompt forward on the same server the
         # pipelined strategies do (serialized prefill jobs) — TTFT is
         # apples-to-apples across all five strategies (ROADMAP item)
@@ -623,7 +707,7 @@ class SpeculativeEngine:
 
     def _step_coupled(self, pending: List[Request],
                       prefill_ms: float = 0.0) -> IterationRecord:
-        batch, gammas = self._plan_cohort(pending)
+        batch, gammas = self._plan_cohort(pending, now_ms=self.clock_ms)
         parts = [self._participants(r) for r in batch]
         entries = self._draft_entries(batch, gammas, parts=parts)
         committed, total_committed = self._verify_commit(entries)

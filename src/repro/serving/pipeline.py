@@ -121,7 +121,8 @@ class PipelineExecutor:
             queue_depth=queued,
             backlog=backlog,
             drafter_busy_fracs=self.cluster.busy_fracs(),
-            drafter_wait_fracs=self.cluster.wait_fracs())
+            drafter_wait_fracs=self.cluster.wait_fracs(),
+            spec_saturated=self.eng.sched.spec_saturated)
 
     def _observe_conf(self, entries) -> None:
         """Fold a drafted cohort's fused confidences into the EMA the
@@ -168,6 +169,19 @@ class PipelineExecutor:
                  or r.max_new_tokens - len(r.generated) - opt_ext(r) > 0]
         if not cands:
             return None
+        # admission control (DESIGN.md §2.5), before any prefill is
+        # charged: shed/queue decisions consume the measured saturation
+        # state, in-flight requests are auto-admitted (their commit is
+        # imminent), and preemption victims release their slots here —
+        # their re-admission pays a fresh prefill below once re-admitted
+        obs = self.observation(backlog=len(cands), waiting=prev)
+        if eng.admission is not None:
+            cands = eng._apply_admission(
+                cands, t_vis, obs, inflight_rids=frozenset(inflight),
+                pipe_empty=prev is None)
+            if not cands:
+                return None
+            obs = self.observation(backlog=len(cands), waiting=prev)
         for r in cands:
             if r.rid not in eng.entry_logits:
                 # cold request: the prompt forward occupies the
@@ -183,9 +197,7 @@ class PipelineExecutor:
             eng._ensure_prefilled(r)
         extra = {r.rid: opt_ext(r) for r in cands if r.rid in inflight}
         batch, gammas = eng._plan_cohort(
-            cands, observation=self.observation(backlog=len(cands),
-                                                waiting=prev),
-            extra_ctx=extra)
+            cands, observation=obs, extra_ctx=extra, now_ms=t_vis)
         optim = {r.rid: inflight[r.rid].d_chains
                  for r in batch if r.rid in inflight}
 

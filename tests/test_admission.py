@@ -1,0 +1,226 @@
+"""SLO-aware admission control (core/admission.py, DESIGN.md §2.5):
+decide() policy units, zero-token latency-stat hardening, and the
+engine-level chaos paths — overload shedding with exact accounting, and
+priority preemption with a lossless re-admit. Engine tests use
+random-init tiny models (losslessness does not need trained weights)."""
+import jax
+import numpy as np
+import pytest
+
+from benchmarks.common import completion_stats
+from conftest import TINY_MAX_LEN as MAX_LEN, tiny_model_cfg as _tiny
+from repro.config import CoSineConfig, ModelConfig
+from repro.core.admission import AdmissionController
+from repro.core.latency_model import LatencyModel
+from repro.core.request_pool import Request, RequestPool
+from repro.core.scheduler import PipelineObservation
+from repro.models import model as M
+from repro.serving.engine import SpeculativeEngine
+
+SAT = PipelineObservation(verify_busy_frac=1.0, queue_depth=2)
+IDLE = PipelineObservation(verify_busy_frac=0.3, queue_depth=0)
+
+
+def _reqs(pool, specs):
+    out = []
+    for sp in specs:
+        r = pool.add(np.zeros(sp.get("plen", 8), np.int32), 16,
+                     arrival_ms=sp.get("arrival", 0.0),
+                     deadline_ms=sp.get("deadline", float("inf")),
+                     priority=sp.get("priority", 1))
+        if sp.get("started"):
+            r.generated = [1]
+        out.append(r)
+    return out
+
+
+def _ctl(**kw):
+    cfg = CoSineConfig(enable_admission=True, **kw)
+    return AdmissionController(cfg, LatencyModel()), cfg
+
+
+# ------------------------------------------------------------- decide()
+def test_hopeless_shed_only_under_saturation():
+    ctl, _ = _ctl()
+    pool = RequestPool()
+    hopeless, ok = _reqs(pool, [{"deadline": 1.0}, {"deadline": 1e9}])
+    # idle verifier: a late request is still served best-effort
+    dec = ctl.decide([hopeless, ok], now_ms=100.0, observation=IDLE)
+    assert hopeless in dec.admit and not dec.shed
+    # saturated: serving it is pure goodput loss -> shed
+    dec = ctl.decide([hopeless, ok], now_ms=100.0, observation=SAT)
+    assert dec.shed == [hopeless] and dec.admit == [ok]
+    # ... but an empty pipe overrides saturation (liveness)
+    dec = ctl.decide([hopeless, ok], now_ms=100.0, observation=SAT,
+                     pipe_empty=True)
+    assert not dec.shed
+
+
+def test_started_requests_never_shed():
+    ctl, _ = _ctl()
+    pool = RequestPool()
+    (started,) = _reqs(pool, [{"deadline": 1.0, "started": True}])
+    dec = ctl.decide([started], now_ms=100.0, observation=SAT)
+    assert dec.admit == [started] and not dec.shed
+
+
+def test_queue_cap_bounds_cold_backlog():
+    ctl, _ = _ctl(admit_queue_cap=2)
+    pool = RequestPool()
+    rs = _reqs(pool, [{"arrival": float(i)} for i in range(7)])
+    dec = ctl.decide(rs, now_ms=10.0, observation=SAT)
+    # worst-first: 2 admitted, 2 queued, overflow past 2x the cap shed
+    assert len(dec.admit) == 2 and len(dec.queued) == 2
+    assert len(dec.shed) == 3
+    assert dec.admit == rs[:2]         # urgency order = arrival here
+    # unsaturated: the cap does not apply
+    dec = ctl.decide(rs, now_ms=10.0, observation=IDLE)
+    assert len(dec.admit) == 7 and not dec.queued and not dec.shed
+
+
+def test_preemption_picks_lowest_priority_victim():
+    ctl, _ = _ctl(max_batch=2)
+    pool = RequestPool()
+    lo, mid, hi = _reqs(pool, [
+        {"priority": 2, "started": True},
+        {"priority": 1, "started": True},
+        {"priority": 0}])
+    # batch full: one protected in-flight slot + two active victims
+    dec = ctl.decide([hi], now_ms=0.0, observation=SAT,
+                     active=[lo, mid], n_protected=0)
+    assert dec.preempt == [lo]          # lowest class evicted first
+    # no inversion: an equal-priority arrival preempts nobody
+    (peer,) = _reqs(pool, [{"priority": 2}])
+    dec = ctl.decide([peer], now_ms=0.0, observation=SAT,
+                     active=[lo, mid], n_protected=0)
+    assert not dec.preempt
+
+
+def test_preemption_respects_free_slots():
+    ctl, _ = _ctl(max_batch=4)
+    pool = RequestPool()
+    lo, hi = _reqs(pool, [{"priority": 2, "started": True},
+                          {"priority": 0}])
+    # 4 slots, 1 protected, 1 victim -> 2 free: no need to preempt
+    dec = ctl.decide([hi], now_ms=0.0, observation=SAT,
+                     active=[lo], n_protected=1)
+    assert not dec.preempt
+
+
+# ---------------------------------------------- zero-token stat hardening
+def test_completion_stats_ignores_zero_token_completions():
+    ok = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=4,
+                 arrival_ms=0.0, generated=[1, 2], done=True,
+                 finish_ms=100.0, first_token_ms=40.0)
+    shed = Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=4,
+                   arrival_ms=10.0, done=True, finish_ms=50.0,
+                   shed_ms=50.0)
+    s = completion_stats([ok, shed])
+    assert s["ms_per_tok"] == pytest.approx(50.0)   # not skewed by shed
+    assert s["p99"] == pytest.approx(50.0)
+    assert s["ttft"] == pytest.approx(40.0)         # -1 sentinel excluded
+    assert s["n_zero_tok"] == 1
+    empty = completion_stats([shed])                # no samples at all
+    assert empty["ms_per_tok"] == 0.0 and empty["p99"] == 0.0
+    assert empty["ttft"] == 0.0
+
+
+# ------------------------------------------------------ engine-level chaos
+@pytest.fixture(scope="module")
+def models():
+    tcfg = _tiny("attn")
+    tparams = M.init_params(jax.random.PRNGKey(0), tcfg)
+    dcfg = ModelConfig(name="tiny-draft", family="dense", n_layers=1,
+                       d_model=48, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=96, vocab=50, tie_embeddings=True,
+                       dtype="float32")
+    drafters = [(dcfg, M.init_params(jax.random.PRNGKey(i + 1), dcfg),
+                 f"d{i}") for i in range(2)]
+    return {"target": (tcfg, tparams), "drafters": drafters}
+
+
+def _greedy_reference(cfg, params, prompt, n):
+    import jax.numpy as jnp
+    cache = M.init_cache(cfg, 1, MAX_LEN, dtype=jnp.float32)
+    lg, cache, _ = M.prefill(params, cfg, jnp.asarray(prompt)[None, :],
+                             cache)
+    last = np.asarray(lg[0, -1, :cfg.vocab])
+    out = []
+    for _ in range(n):
+        t = int(np.argmax(last))
+        out.append(t)
+        lg, cache, _ = M.decode_step(params, cfg, jnp.asarray([[t]]), cache)
+        last = np.asarray(lg[0, 0, :cfg.vocab])
+    return out
+
+
+def _engine(models, strategy, **cos_kw):
+    cos = CoSineConfig(n_drafters=2, draft_len=4, drafters_per_request=2,
+                       tree_width=2, enable_admission=True, **cos_kw)
+    return SpeculativeEngine(models["target"], models["drafters"], cos,
+                             strategy=strategy, max_len=MAX_LEN, seed=0)
+
+
+def _drain(eng, max_iters=3000):
+    for _ in range(max_iters):
+        if eng.step() is None:
+            return
+    raise AssertionError("engine did not drain")
+
+
+def test_overload_burst_shed_accounting(models):
+    """Burst 10 requests at ~4x past what max_batch=2 can serve inside
+    the SLO: admission sheds the hopeless tail, never a started stream,
+    and every submitted request is accounted completed-or-shed."""
+    rng = np.random.default_rng(3)
+    eng = _engine(models, "cosine", max_batch=2, default_slo_ms=400.0,
+                  admit_queue_cap=4)
+    for i in range(10):
+        eng.submit(rng.integers(0, 50, 8), max_new_tokens=6,
+                   arrival_ms=float(i * 5), priority=int(i % 3))
+    _drain(eng)
+    pool = eng.pool
+    comp, shed = pool.completed, pool.shed
+    # exact accounting: nothing stranded, nothing half-committed
+    assert pool.n_submitted == len(comp) + len(shed) == 10
+    assert pool.empty
+    assert len(shed) >= 1 and len(comp) >= 1
+    assert all(not r.generated and r.was_shed for r in shed)
+    assert eng.stats.n_shed == len(shed)
+    # losslessness survives the chaos: every surviving stream is exactly
+    # the target's greedy continuation
+    tcfg, tparams = models["target"]
+    for r in comp:
+        assert r.generated == _greedy_reference(tcfg, tparams, r.prompt,
+                                                len(r.generated)), r.rid
+    # stats pipeline is robust to the zero-token shed completions
+    s = completion_stats(comp + shed)
+    assert s["n_zero_tok"] == len(shed)
+    assert np.isfinite(s["p99"]) and np.isfinite(s["ttft"])
+
+
+def test_priority_preemption_and_lossless_readmit(models):
+    """A high-priority arrival evicts the low-priority slot-holder
+    (max_batch=1); the victim re-admits via re-prefill and still decodes
+    the exact greedy continuation."""
+    rng = np.random.default_rng(4)
+    eng = _engine(models, "specinfer", max_batch=1)
+    lo = eng.submit(rng.integers(0, 50, 24), max_new_tokens=8,
+                    arrival_ms=0.0, priority=2)
+    hi = eng.submit(rng.integers(0, 50, 4), max_new_tokens=4,
+                    arrival_ms=400.0, priority=0)
+    _drain(eng)
+    assert lo.n_preemptions >= 1
+    assert eng.stats.n_preempted >= 1
+    assert not eng.stats.n_shed          # no deadlines -> nothing shed
+    assert {r.rid for r in eng.pool.completed} == {lo.rid, hi.rid}
+    # the preempted stream lost its caches, not its tokens: the re-admit
+    # re-prefilled prompt+generated and the result is still greedy-exact
+    tcfg, tparams = models["target"]
+    assert lo.generated == _greedy_reference(tcfg, tparams, lo.prompt, 8)
+    assert hi.generated == _greedy_reference(tcfg, tparams, hi.prompt, 4)
+    # preemption is what bought the TTFT: the high-priority request got
+    # its first token while the evicted stream was still unfinished,
+    # instead of waiting out the victim's whole 8-token run
+    assert hi.first_token_ms < lo.finish_ms
+    assert hi.first_token_ms - hi.arrival_ms < 1000.0

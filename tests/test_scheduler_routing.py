@@ -163,3 +163,103 @@ def test_router_update_and_route():
     frac_best = np.mean([2 in p for p in picks])
     assert frac_best > 0.6
     assert all(len(p) == 2 for p in picks)
+
+
+# ------------------------------------------------ SLO / admission planning
+def test_plan_aging_prevents_starvation():
+    """Candidate truncation (4*max_batch) used to starve a long request
+    behind a stream of short fresh arrivals; arrival-age credit pulls it
+    to the front of the sort."""
+    lens = [8] * 12 + [190]
+    arrivals = [10_000.0] * 12 + [0.0]       # the long one is old
+    fresh = CoSineConfig(max_batch=2, t_max_ms=1e9, age_tok_per_ms=0.0)
+    plan = RequestScheduler(fresh, LatencyModel()).plan(
+        _mk_requests(13, lens, arrivals), now_ms=10_500.0)
+    def old_req(p):
+        return [r for r in p.requests if r.context_len == 190]
+
+    assert not old_req(plan)                 # without aging: starved
+    aged = CoSineConfig(max_batch=2, t_max_ms=1e9, age_tok_per_ms=0.05)
+    plan = RequestScheduler(aged, LatencyModel()).plan(
+        _mk_requests(13, lens, arrivals), now_ms=10_500.0)
+    assert old_req(plan)                     # with aging: selected
+
+
+def test_plan_aging_priority_bonus():
+    """Priority class 0 ages faster than class 2: with equal arrivals,
+    the high-priority long request is credited ahead."""
+    cfg = CoSineConfig(max_batch=1, t_max_ms=1e9, age_tok_per_ms=0.05,
+                       priority_age_bonus_ms=2000.0)
+    rs = _mk_requests(2, [100, 10])
+    rs[0].priority = 0                       # long but high class
+    rs[1].priority = 2
+    plan = RequestScheduler(cfg, LatencyModel()).plan(rs, now_ms=0.0)
+    assert plan.requests == [rs[0]]
+
+
+def test_effective_lam_clamped_and_deadbanded():
+    from repro.core.scheduler import PipelineObservation as Obs
+    cfg = CoSineConfig(max_batch=4)
+    sched = RequestScheduler(cfg, LatencyModel())
+    lam = sched.effective_lam
+    base = lam(Obs(verify_busy_frac=0.9, draft_busy_frac=0.5))
+    assert base == cfg.lam
+    # queue pressure raises lambda but is clamped at lam_mult_max
+    jam = lam(Obs(verify_busy_frac=1.0, draft_busy_frac=0.5,
+                  queue_depth=500))
+    assert jam == cfg.lam * cfg.lam_mult_max
+    # monotone non-decreasing in queue depth up to the clamp
+    seq = [lam(Obs(verify_busy_frac=1.0, draft_busy_frac=0.5,
+                   queue_depth=q)) for q in range(0, 12)]
+    assert all(b >= a for a, b in zip(seq, seq[1:]))
+    # starved verifier discounts; the deadband keeps the setpoint stable
+    assert lam(Obs(verify_busy_frac=0.3, draft_busy_frac=0.3)) \
+        == cfg.lam * 0.5
+    assert lam(Obs(verify_busy_frac=0.78, draft_busy_frac=0.3)) == cfg.lam
+    # ... but not when speculation is already saturated (draft more
+    # would change nothing) or the backlog exceeds a batch
+    assert lam(Obs(verify_busy_frac=0.3, draft_busy_frac=0.3,
+                   spec_saturated=True)) == cfg.lam
+    assert lam(Obs(verify_busy_frac=0.3, draft_busy_frac=0.3,
+                   backlog=5)) == cfg.lam
+    # hot drafter node with verifier slack trims speculation (verify at
+    # 0.8: above the starved threshold so only the drafter signal fires)
+    assert lam(Obs(verify_busy_frac=0.8, draft_busy_frac=0.99)) \
+        == cfg.lam * 2.0
+
+
+def test_balance_gamma_capped_at_gamma_max():
+    cfg = CoSineConfig(gamma_max=6)
+    # drafting can never cover verification: capped, saturation flagged
+    fast = LatencyModel(ssm_step_ms=0.001, ssm_ctx_ms_per_ktok=0.0,
+                        ssm_batch_ms=0.0)
+    sched = RequestScheduler(cfg, fast)
+    assert sched.balance_gamma(1, 100) == 6
+    assert sched.spec_saturated
+    # a slow drafter covers at gamma=1: no saturation
+    slow = LatencyModel(ssm_step_ms=1000.0)
+    sched = RequestScheduler(cfg, slow)
+    assert sched.balance_gamma(1, 100) == 1
+    assert not sched.spec_saturated
+
+
+def test_slo_gamma_trims_with_shrinking_headroom():
+    cfg = CoSineConfig(min_gamma=1, gamma_max=16)
+    sched = RequestScheduler(cfg, LatencyModel())
+    pool = RequestPool()
+    r = pool.add(np.zeros(32, np.int32), 32, deadline_ms=1e9)
+    r.gamma = 8
+    assert sched.slo_gamma(r, now_ms=0.0) == 8       # ample headroom
+    r.deadline_ms = float("inf")
+    assert sched.slo_gamma(r, now_ms=0.0) == 8       # no SLO set
+    # monotone: gamma never grows as the deadline approaches
+    r.deadline_ms = 1e9
+    gs = [sched.slo_gamma(r, now_ms=1e9 - h)
+          for h in (1e9, 1e6, 1e4, 2e3, 500.0, 0.0)]
+    assert all(b <= a for a, b in zip(gs, gs[1:]))
+    assert gs[-1] == cfg.min_gamma                   # overdue: floor
+    # trimming never raises a gamma already below min_gamma
+    cfg2 = CoSineConfig(min_gamma=4, gamma_max=16)
+    sched2 = RequestScheduler(cfg2, LatencyModel())
+    r.gamma = 2
+    assert sched2.slo_gamma(r, now_ms=1e9) == 2
