@@ -156,6 +156,58 @@ def compare(fresh: dict, base: dict, prefix: str):
     return lines, failures, new_rows
 
 
+# observability gate (DESIGN.md §2.6): the trace's accounted verify-track
+# busy/idle totals must reproduce the benchmark's vutil column. Any drift
+# beyond float/µs-rounding noise means the span accounting and the
+# ServeStats accounting have diverged — an accounting bug, not noise.
+TRACE_VUTIL_TOL = 0.001
+
+
+def trace_vutil(path: str):
+    """(vutil, busy_ms, idle_ms) of the verify stage track, recomputed
+    from the exported trace alone: non-bubble spans are busy, ``bubble``
+    spans are idle; projected per-request copies (args.stage) and other
+    tracks are excluded."""
+    with open(path) as f:
+        trace = json.load(f)
+    busy = idle = 0.0
+    for ev in trace["traceEvents"]:
+        args = ev.get("args", {})
+        if (
+            ev.get("ph") != "X"
+            or ev.get("cat") != "stage"
+            or args.get("track") != "verify"
+            or "stage" in args
+        ):
+            continue
+        if ev.get("name") == "bubble":
+            idle += ev.get("dur", 0.0)
+        else:
+            busy += ev.get("dur", 0.0)
+    return busy / max(busy + idle, 1e-9), busy / 1e3, idle / 1e3
+
+
+def check_trace(path: str, fresh: dict, row_name: str):
+    """Gate one exported trace against the fresh run's vutil column."""
+    frow = fresh.get(row_name)
+    if frow is None or "vutil" not in frow["metrics"]:
+        return [f"trace gate: fresh row {row_name!r} has no vutil metric"]
+    bench_v = frow["metrics"]["vutil"]
+    tv, busy_ms, idle_ms = trace_vutil(path)
+    drift = abs(tv - bench_v) / max(bench_v, 1e-9)
+    print(
+        f"\ntrace gate: {path} verify busy={busy_ms:.2f}ms idle={idle_ms:.2f}ms "
+        f"vutil={tv:.5f} vs {row_name} vutil={bench_v:.5f} (drift {drift:.5%})"
+    )
+    if drift > TRACE_VUTIL_TOL:
+        return [
+            f"trace {path}: accounted vutil {tv:.5f} drifts {drift:.3%} from "
+            f"{row_name} vutil {bench_v:.5f} (tolerance {TRACE_VUTIL_TOL:.1%}) "
+            f"-- span accounting and ServeStats have diverged"
+        ]
+    return []
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fresh", required=True, help="benchmark JSON from this run")
@@ -165,11 +217,25 @@ def main(argv=None) -> int:
         default="fig7,traffic",
         help="comma-separated name prefixes to gate (kernel wall-times are noise)",
     )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        metavar="PATH",
+        help="exported trace JSON: gate its accounted verify busy/idle "
+        "totals against the fresh run's vutil",
+    )
+    ap.add_argument(
+        "--trace-row",
+        default="fig7_high_cosine",
+        help="fresh row whose vutil the trace must reproduce",
+    )
     args = ap.parse_args(argv)
 
     fresh = load_rows(args.fresh)
     base = load_rows(args.baseline)
     lines, failures, new_rows = compare(fresh, base, args.prefix)
+    if args.trace:
+        failures.extend(check_trace(args.trace, fresh, args.trace_row))
     print("\n".join(lines))
     if new_rows:
         print(f"\nnew rows (not in baseline, not gated): {', '.join(new_rows)}")

@@ -46,7 +46,7 @@ def make_arrivals(mode: str, n: int, seed: int = 0):
 
 
 def serve_online(fixture, strategy: str, mode: str, n_requests: int = 10,
-                 max_new: int = 16, profiles=None):
+                 max_new: int = 16, profiles=None, trace_path=None):
     eng = fixture.engine(strategy, drafter_profiles=profiles)
     arr = make_arrivals(mode, n_requests, seed=7)
     for (p, dom), t in zip(fixture.corpus.prompts(n_requests, 16, seed=51),
@@ -61,6 +61,9 @@ def serve_online(fixture, strategy: str, mode: str, n_requests: int = 10,
         if eng.step() is None:
             break
         iter_wall_s.append(time.perf_counter() - t0)
+    if trace_path:
+        from repro.obs.export import export_engine_trace
+        export_engine_trace(eng, trace_path)
     cstats = completion_stats(eng.pool.completed)
     stats = eng.stats
     dutil = dlate = ""
@@ -115,7 +118,8 @@ def _hetero_profiles(n: int, slow_factor: float, slow_node: int = 0):
 
 
 def run(fixture, strategies=("ar", "specinfer", "pipeinfer", "cosine"),
-        modes=("low", "high", "volatile"), quick: bool = False):
+        modes=("low", "high", "volatile"), quick: bool = False,
+        trace=None):
     if quick:
         modes = ("high", "volatile")
     n_req = 6 if quick else 10
@@ -127,8 +131,10 @@ def run(fixture, strategies=("ar", "specinfer", "pipeinfer", "cosine"),
         ref = None
         for strat in strategies:
             t0 = time.time()
-            m = serve_online(fixture, strat, mode, n_requests=n_req,
-                             max_new=max_new)
+            m = serve_online(
+                fixture, strat, mode, n_requests=n_req, max_new=max_new,
+                trace_path=(f"{trace}/fig7_{mode}_{strat}.json"
+                            if trace else None))
             us = (time.time() - t0) * 1e6
             if strat == "specinfer":
                 ref = m["ms_per_tok"]
@@ -153,7 +159,9 @@ def run(fixture, strategies=("ar", "specinfer", "pipeinfer", "cosine"),
         t0 = time.time()
         m = serve_online(fixture, "cosine", "high", n_requests=n_req,
                          max_new=max_new,
-                         profiles=_hetero_profiles(n_nodes, f))
+                         profiles=_hetero_profiles(n_nodes, f),
+                         trace_path=(f"{trace}/fig7_hetero_slow{f:g}x"
+                                     f"_cosine.json" if trace else None))
         us = (time.time() - t0) * 1e6
         # the acceptance direction: straggler cut-off keeps cosine's
         # verifier bubble below the homogeneous pipeinfer baseline

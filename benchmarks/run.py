@@ -41,7 +41,15 @@ def main() -> None:
                          "workloads for benches that support quick=")
     ap.add_argument("--json", type=str, default=None, metavar="PATH",
                     help="also write the rows as a JSON artifact")
+    ap.add_argument("--trace", type=str, nargs="?", const="traces",
+                    default=None, metavar="DIR",
+                    help="export per-run Perfetto traces + metrics JSON "
+                         "into DIR (default ./traces) for benches that "
+                         "support it (fig7, traffic)")
     args = ap.parse_args()
+    if args.trace:
+        import os
+        os.makedirs(args.trace, exist_ok=True)
     only = args.only.split(",") if args.only else None
 
     selected = [(n, m, f) for n, m, f in BENCHES
@@ -69,8 +77,11 @@ def main() -> None:
         try:
             mod = __import__(modname, fromlist=["run"])
             kw = {}
-            if args.quick and "quick" in inspect.signature(mod.run).parameters:
+            params = inspect.signature(mod.run).parameters
+            if args.quick and "quick" in params:
                 kw["quick"] = True
+            if args.trace and "trace" in params:
+                kw["trace"] = args.trace
             rows = mod.run(fixture, **kw) if needs_fx else mod.run(**kw)
             for r in rows:
                 print(f"{r[0]},{r[1]:.1f},{r[2]}")

@@ -82,7 +82,8 @@ def _greedy_reference(tcfg, tparams, prompt, n, max_len=512):
 
 def serve_trace(fixture, mode: str, admission: bool, n_requests: int = 24,
                 max_new: int = 12, slo_ms: float = SLO_MS, seed: int = 11,
-                check_lossless: bool = False, lossless_sample: int = 8):
+                check_lossless: bool = False, lossless_sample: int = 8,
+                trace_path=None):
     eng = fixture.engine(
         "cosine", max_batch=MAX_BATCH, enable_admission=admission,
         default_slo_ms=slo_ms, admit_queue_cap=2 * MAX_BATCH)
@@ -94,6 +95,11 @@ def serve_trace(fixture, mode: str, admission: bool, n_requests: int = 24,
     for _ in range(50_000):
         if eng.step() is None:
             break
+    if trace_path:
+        # burst replays are the decision-log acceptance target: the
+        # sibling .metrics.json carries every λ/γ/admission decision
+        from repro.obs.export import export_engine_trace
+        export_engine_trace(eng, trace_path)
 
     comp, shed = eng.pool.completed, eng.pool.shed
     cs = completion_stats(comp)
@@ -134,7 +140,7 @@ def _fmt(m: dict, extra: str = "") -> str:
     return s + extra
 
 
-def run(fixture, quick: bool = False):
+def run(fixture, quick: bool = False, trace=None):
     n_req = 14 if quick else 24
     max_new = 10 if quick else 12
     grid = [
@@ -146,12 +152,14 @@ def run(fixture, quick: bool = False):
     for mode, adm in grid:
         t0 = time.time()
         burst = mode.startswith("burst")
+        tag = "adm" if adm else "noadm"
         m = serve_trace(fixture, mode, adm, n_requests=n_req,
                         max_new=max_new,
                         slo_ms=BURST_SLO_MS if burst else SLO_MS,
-                        check_lossless=burst)
+                        check_lossless=burst,
+                        trace_path=(f"{trace}/traffic_{mode}_{tag}.json"
+                                    if trace else None))
         us = (time.time() - t0) * 1e6
-        tag = "adm" if adm else "noadm"
         extra = ""
         peer = by_name.get(f"traffic_{mode}_noadm")
         if adm and peer is not None:

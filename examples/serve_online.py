@@ -4,13 +4,27 @@ adaptive routing, token fusion, and the Alg. 2 scheduler — then the same
 stream through each baseline for comparison.
 
   PYTHONPATH=src python examples/serve_online.py [--requests 12] [--mode volatile]
+
+With --trace [DIR], the cosine run's telemetry (DESIGN.md §2.6) is
+exported as DIR/serve_online_cosine.json — a Perfetto-loadable trace
+(load it at https://ui.perfetto.dev or chrome://tracing) plus a sibling
+.metrics.json with the counters and the controller decision log.
+Summarize it in the terminal with:
+
+  PYTHONPATH=src python -m repro.obs.summarize DIR/serve_online_cosine.json
 """
 import argparse
+import os
 import sys
 
 import numpy as np
 
-sys.path.insert(0, "benchmarks")
+# resolve the bench helpers relative to this file so the example runs
+# from any cwd (repo root is needed for `benchmarks.*`, the package dir
+# for the fixture-building `common` module)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "benchmarks"))
+sys.path.insert(0, _ROOT)
 
 
 def main():
@@ -19,6 +33,10 @@ def main():
     ap.add_argument("--mode", choices=["low", "high", "volatile"],
                     default="volatile")
     ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--trace", type=str, nargs="?", const="traces",
+                    default=None, metavar="DIR",
+                    help="export the cosine run's Perfetto trace + "
+                         "metrics JSON into DIR (default ./traces)")
     args = ap.parse_args()
 
     from common import build_fixture
@@ -45,6 +63,12 @@ def main():
         print(f"{strategy:<10} {np.mean(lat):>9.1f} "
               f"{np.percentile(lat, 95):>8.1f} "
               f"{stats.throughput_tps:>8.1f} {stats.mean_acceptance:>9.2f}")
+        if args.trace and strategy == "cosine":
+            from repro.obs.export import export_engine_trace
+            os.makedirs(args.trace, exist_ok=True)
+            path = os.path.join(args.trace, "serve_online_cosine.json")
+            export_engine_trace(eng, path)
+            print(f"  trace -> {path} (+ sibling .metrics.json)")
 
     print("\nper-domain routing learned by CoSine (request 0's M vector):")
 

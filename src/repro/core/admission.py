@@ -41,6 +41,7 @@ from repro.config import CoSineConfig
 from repro.core.latency_model import LatencyModel
 from repro.core.request_pool import Request
 from repro.core.scheduler import PipelineObservation
+from repro.obs.metrics import DecisionLog
 
 
 @dataclass
@@ -53,9 +54,13 @@ class AdmissionDecision:
 
 
 class AdmissionController:
-    def __init__(self, cfg: CoSineConfig, lat: LatencyModel):
+    def __init__(self, cfg: CoSineConfig, lat: LatencyModel,
+                 decisions: Optional[DecisionLog] = None):
         self.cfg = cfg
         self.lat = lat
+        # controller decision log (DESIGN.md §2.6): each pass's verdict
+        # is recorded with the saturation inputs it keyed on
+        self.decisions = decisions
 
     # ----------------------------------------------------------- helpers
     def min_service_ms(self, r: Request) -> float:
@@ -150,4 +155,18 @@ class AdmissionController:
                 if hi.priority < eligible[0].priority:
                     dec.preempt.append(eligible.pop(0))
                 break                   # one eviction per pass
+
+        if self.decisions is not None and (cands or active):
+            self.decisions.record(
+                now_ms, "admission",
+                n_cands=len(cands), saturated=saturated,
+                pipe_empty=pipe_empty,
+                queue_depth=(observation.queue_depth
+                             if observation is not None else 0),
+                verify_busy_frac=(observation.verify_busy_frac
+                                  if observation is not None else 0.0),
+                admitted=tuple(r.rid for r in dec.admit),
+                queued=tuple(r.rid for r in dec.queued),
+                shed=tuple(r.rid for r in dec.shed),
+                preempted=tuple(r.rid for r in dec.preempt))
         return dec

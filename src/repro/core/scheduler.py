@@ -28,6 +28,7 @@ import numpy as np
 from repro.config import CoSineConfig
 from repro.core.latency_model import LatencyModel
 from repro.core.request_pool import Request
+from repro.obs.metrics import DecisionLog
 
 
 @dataclass
@@ -103,15 +104,21 @@ class BatchPlan:
 
 class RequestScheduler:
     def __init__(self, cfg: CoSineConfig, lat: LatencyModel,
-                 mem_per_token_bytes: float = 0.0):
+                 mem_per_token_bytes: float = 0.0,
+                 decisions: Optional[DecisionLog] = None):
         self.cfg = cfg
         self.lat = lat
         self.mem_per_token = mem_per_token_bytes
+        # controller decision log (DESIGN.md §2.6): every λ-multiplier
+        # update, SLO trim, balance cap and feedback step is recorded
+        # with its inputs so feedback behaviour is auditable
+        self.decisions = decisions
         # set by balance_gamma: drafting cannot cover verification even
         # at cfg.gamma_max (surfaced via PipelineObservation)
         self.spec_saturated = False
 
-    def balance_gamma(self, b: int, l: int, n_drafters: int = 1) -> int:
+    def balance_gamma(self, b: int, l: int, n_drafters: int = 1,
+                      now_ms: float = 0.0) -> int:
         """Pipeline-balancing draft length: smallest gamma whose drafting
         time covers the verification time (keeps the verifier busy without
         over-drafting — the adaptive speculation control signal).
@@ -128,12 +135,18 @@ class RequestScheduler:
             t_v = self.lat.t_llm(b, l, b * gamma)
             if t_d >= t_v:
                 self.spec_saturated = False
+                if self.decisions is not None:
+                    self.decisions.record(now_ms, "balance_gamma", b=b, l=l,
+                                          gamma=gamma, saturated=False)
                 return gamma
         self.spec_saturated = True
+        if self.decisions is not None:
+            self.decisions.record(now_ms, "balance_gamma", b=b, l=l,
+                                  gamma=g_cap, saturated=True)
         return g_cap
 
-    def effective_lam(self, observation: Optional[PipelineObservation]
-                      ) -> float:
+    def effective_lam(self, observation: Optional[PipelineObservation],
+                      now_ms: float = 0.0) -> float:
         """Observation-conditioned lambda for Eq. (8).
 
         Queue pressure raises it (trim speculation when drafted work is
@@ -162,6 +175,15 @@ class RequestScheduler:
                 and observation.verify_busy_frac < 0.95 - dead:
             mult *= 2.0                      # drafting is the bottleneck
         mult = min(max(mult, cfg.lam_mult_min), cfg.lam_mult_max)
+        if self.decisions is not None:
+            self.decisions.record(
+                now_ms, "lam", mult=mult, lam=cfg.lam * mult,
+                queue_depth=observation.queue_depth,
+                backlog=observation.backlog,
+                verify_busy_frac=observation.verify_busy_frac,
+                hottest_drafter_frac=observation.hottest_drafter_frac,
+                max_drafter_wait_frac=observation.max_drafter_wait_frac,
+                spec_saturated=observation.spec_saturated)
         return cfg.lam * mult
 
     def slo_gamma(self, r: Request, now_ms: float,
@@ -185,6 +207,11 @@ class RequestScheduler:
             return g
         headroom = r.headroom_ms(now_ms)
         if headroom <= 0.0:
+            if floor != g and self.decisions is not None:
+                self.decisions.record(now_ms, "slo_gamma", rid=r.rid,
+                                      gamma_from=g, gamma_to=floor,
+                                      headroom_ms=headroom,
+                                      budget_per_tok_ms=0.0)
             return floor
         remaining = max(r.max_new_tokens - len(r.generated), 1)
         budget_per_tok = headroom / remaining
@@ -198,8 +225,14 @@ class RequestScheduler:
             # acceptance is bounded by the draft length (+1 correction)
             return t_it / min(exp_acc + 1.0, g_ + 1.0)
 
+        g0 = g
         while g > floor and ms_per_tok(g) > budget_per_tok:
             g -= 1
+        if g != g0 and self.decisions is not None:
+            self.decisions.record(now_ms, "slo_gamma", rid=r.rid,
+                                  gamma_from=g0, gamma_to=g,
+                                  headroom_ms=headroom,
+                                  budget_per_tok_ms=budget_per_tok)
         return g
 
     def plan(self, requests: Sequence[Request], pipelined: bool = True,
@@ -230,7 +263,7 @@ class RequestScheduler:
           model stays the *real* max context of the batch.
         """
         cfg = self.cfg
-        lam = self.effective_lam(observation)
+        lam = self.effective_lam(observation, now_ms=now_ms)
         ctx_of = (lambda r: r.context_len + (extra_ctx or {}).get(r.rid, 0))
 
         def aged_len(r: Request) -> float:
@@ -246,12 +279,16 @@ class RequestScheduler:
         cand = sorted(requests,
                       key=lambda r: (aged_len(r), r.arrival_ms, r.rid))
         cand = cand[: 4 * cfg.max_batch]          # bound the search
+        # SLO trimming is per-request, independent of the batch prefix —
+        # computed once per plan (also keeps the decision log to one
+        # entry per trimmed request, not one per candidate prefix)
+        slo_of = {r.rid: self.slo_gamma(r, now_ms, pipelined) for r in cand}
         best: BatchPlan | None = None
         for b in range(1, min(len(cand), cfg.max_batch) + 1):
             sel = cand[:b]
             l = max(ctx_of(r) for r in sel)
             gam = adaptive_speculation(
-                [self.slo_gamma(r, now_ms, pipelined) for r in sel],
+                [slo_of[r.rid] for r in sel],
                 cfg.gamma_max_total, cfg.min_gamma)
             big_g = sum(gam)
             t_ssm = self.lat.t_ssm(draft_b(b), l, max(gam), n_drafters)
@@ -281,7 +318,8 @@ class RequestScheduler:
         return best
 
     def update_gamma_feedback(self, request: Request, n_committed: int,
-                              verifier_busy_frac: float):
+                              verifier_busy_frac: float,
+                              now_ms: float = 0.0):
         """Alg. 2 adaptive control: grow gamma when the verifier has slack
         and drafts are being accepted; shrink when overloaded/rejected.
 
@@ -290,7 +328,13 @@ class RequestScheduler:
         queued cohorts pushing it above 1) — observed on the event
         timeline, not derived from the latency formulas. The coupled
         baselines still pass their analytic t_llm/t_iter ratio."""
+        g0 = request.gamma
         if verifier_busy_frac < 0.8 and n_committed >= request.gamma:
             request.gamma = min(request.gamma + 1, self.cfg.gamma_max)
         elif verifier_busy_frac > 1.2 or n_committed <= 1:
             request.gamma = max(request.gamma - 1, self.cfg.min_gamma)
+        if request.gamma != g0 and self.decisions is not None:
+            self.decisions.record(now_ms, "gamma_feedback", rid=request.rid,
+                                  gamma_from=g0, gamma_to=request.gamma,
+                                  n_committed=n_committed,
+                                  verifier_busy_frac=verifier_busy_frac)

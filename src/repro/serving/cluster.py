@@ -53,6 +53,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.latency_model import DrafterProfile, LatencyModel
+from repro.obs.trace import CLUSTER, Tracer
 from repro.serving.events import EventLog, StageClock
 
 FUSED = "fused"
@@ -116,12 +117,14 @@ class DrafterCluster:
     """
 
     def __init__(self, profiles: Sequence[DrafterProfile], lat: LatencyModel,
-                 cfg, log: Optional[EventLog] = None, seed: int = 0):
+                 cfg, log: Optional[EventLog] = None, seed: int = 0,
+                 tracer: Optional[Tracer] = None):
         self.profiles: Tuple[DrafterProfile, ...] = tuple(profiles)
         self.lat = lat
         self.cfg = cfg
         self.log = log
-        self.nodes = [StageClock(f"draft{i}", log)
+        self.tracer = tracer
+        self.nodes = [StageClock(f"draft{i}", log, tracer)
                       for i in range(len(self.profiles))]
         self._rng = np.random.default_rng((seed, 0xC1A5))
         # cumulative straggler accounting (also mirrored per record)
@@ -151,13 +154,8 @@ class DrafterCluster:
 
     def busy_fracs(self) -> Tuple[float, ...]:
         """Per-node occupancy; a node that never worked reports 0 (it is
-        idle capacity, not saturation — unlike StageClock's no-evidence
-        default of 1, which would trip the scheduler's hot-node trim)."""
-        out = []
-        for n in self.nodes:
-            span = n.busy_ms + n.idle_ms
-            out.append(n.busy_ms / span if span > 0 else 0.0)
-        return tuple(out)
+        idle capacity, not saturation)."""
+        return tuple(n.busy_frac() for n in self.nodes)
 
     def wait_fracs(self) -> Tuple[float, ...]:
         """Per-node chronic queueing: time jobs spent waiting for the
@@ -355,7 +353,8 @@ class DrafterCluster:
     # ----------------------------------------------------------- commit
     def commit_cohort(self, sched: CohortSchedule,
                       rids: Tuple[int, ...] = (),
-                      kind: str = "draft") -> CohortSchedule:
+                      kind: str = "draft",
+                      cohort: int = -1) -> CohortSchedule:
         """Place the planned cohort on the node clocks (the plan already
         resolved roles, dispatch and ready times — token drafting happens
         between plan and commit and cannot change the timing)."""
@@ -369,12 +368,29 @@ class DrafterCluster:
                 d.busy_ms, not_before_ms=sched.gate_ms,
                 kind=kind if d.role == FUSED else f"{kind}_{d.role}",
                 rids=node_rids or rids,
-                release_ms=max(sched.gate_ms, sched.release_ms))
+                release_ms=max(sched.gate_ms, sched.release_ms),
+                cohort=cohort)
             assert abs(start - d.start_ms) < 1e-9 and abs(end - d.end_ms) < 1e-9
             self.node_jobs[d.node] += 1
             self.pace_obs[d.node].append((d.b, sched.l, d.step_ms))
             if d.role != FUSED:
                 self.node_late[d.node] += 1
+        if self.tracer is not None and self.tracer.enabled:
+            # cluster-level activity lives on its own track: transit can
+            # overlap the node's next draft (the link is not the node),
+            # so these spans must not break the serial node tracks
+            self.tracer.instant("fuse", CLUSTER, "cluster",
+                                sched.fused_end_ms, cohort=cohort,
+                                rids=rids, kind=kind)
+            for d in sched.drafts:
+                if d.role == DROPPED:
+                    self.tracer.instant("drop", CLUSTER, "cluster",
+                                        d.end_ms, cohort=cohort,
+                                        node=d.node, kind=kind)
+                else:
+                    self.tracer.span("transit", CLUSTER, "cluster",
+                                     d.end_ms, d.arrival_ms, cohort=cohort,
+                                     node=d.node, role=d.role, kind=kind)
         self.n_cohorts += 1
         self.n_side += sum(1 for d in sched.drafts if d.role == SIDE)
         self.n_dropped += sum(1 for d in sched.drafts if d.role == DROPPED)

@@ -56,6 +56,9 @@ from repro.core.request_pool import Request, RequestPool
 from repro.core.routing import AdaptiveRouter
 from repro.core.scheduler import (PipelineObservation, RequestScheduler,
                                   adaptive_speculation)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import STAGE, Tracer
+from repro.serving.events import DRAFT, VERIFY
 from repro.serving.runner import ModelRunner
 
 STRATEGIES = ("ar", "vanilla", "specinfer", "pipeinfer", "cosine")
@@ -70,6 +73,9 @@ class IterationRecord:
     big_gamma: int
     committed: int
     n_active_drafters: int
+    # cohort sequence number (engine-global, monotone): joins this
+    # record to its trace spans and decision-log entries (DESIGN.md §2.6)
+    cohort: int = -1
     # --- stage-level timeline (DESIGN.md §2.2): measured on the event
     # clocks for pipelined strategies, analytic decomposition for the
     # coupled baselines (where the verifier provably idles during
@@ -94,27 +100,77 @@ class IterationRecord:
 
 @dataclass
 class ServeStats:
+    """Serving aggregates, backed by the metrics registry (DESIGN.md
+    §2.6): the engine increments registry counters as it serves, and the
+    legacy fields are read-only views over them — the registry is the
+    single source, so a metrics JSON export and these properties can
+    never disagree. Per-iteration detail stays in `records`."""
     records: List[IterationRecord] = field(default_factory=list)
-    total_committed: int = 0
-    total_drafted: int = 0
-    # --- admission-control outcomes (DESIGN.md §2.5) ---
-    n_shed: int = 0                      # requests rejected by admission
-    n_preempted: int = 0                 # slot evictions (priority)
-    # --- route-faithful drafting compute (DESIGN.md §2.4) ---
-    # draft_calls: total drafter token-decodes executed, i.e. the sum over
-    # cohorts and nodes of K * |sub-batch|. With routed sub-batches this
-    # is ~k*B*K per cohort; the legacy full fan-out paid N*B*K.
-    draft_calls: int = 0
-    # node_drafted[i]: token-decodes node i executed (its routed sub-batch
-    # sizes times the draft length, summed over cohorts + redrafts).
-    node_drafted: List[int] = field(default_factory=list)
+    metrics: MetricsRegistry = field(default_factory=MetricsRegistry)
+
+    def add_record(self, rec: IterationRecord):
+        """Fold one iteration into the registry. Increment order mirrors
+        the old per-record sums exactly (same float accumulation), so
+        equality tests against the stage clocks keep holding."""
+        self.records.append(rec)
+        m = self.metrics
+        m.inc("serve.iterations")
+        m.inc("serve.committed_tokens", rec.committed)
+        m.inc("serve.drafted_tokens", rec.big_gamma)
+        m.inc("verify.busy_ms", rec.verify_ms + rec.prefill_ms)
+        m.inc("verify.prefill_ms", rec.prefill_ms)
+        m.inc("verify.idle_ms", rec.verify_idle_ms)
+        m.observe("serve.iter_ms", rec.t_iter_ms)
+        m.observe("serve.commit_per_iter", rec.committed)
+        m.observe("serve.batch_size", rec.batch)
 
     def note_draft_work(self, node: int, n_nodes: int, n_tokens: int):
-        if len(self.node_drafted) < n_nodes:
-            self.node_drafted.extend(
-                [0] * (n_nodes - len(self.node_drafted)))
-        self.node_drafted[node] += n_tokens
-        self.draft_calls += n_tokens
+        g = self.metrics.gauge("draft.n_nodes")
+        if g.value < n_nodes:
+            g.set(n_nodes)
+        self.metrics.inc("draft.node_tokens", n_tokens, node=node)
+        self.metrics.inc("draft.calls", n_tokens)
+
+    def note_shed(self):
+        self.metrics.inc("admission.shed")
+
+    def note_preempt(self):
+        self.metrics.inc("admission.preempted")
+
+    @property
+    def total_committed(self) -> int:
+        return int(self.metrics.value("serve.committed_tokens"))
+
+    @property
+    def total_drafted(self) -> int:
+        return int(self.metrics.value("serve.drafted_tokens"))
+
+    # --- admission-control outcomes (DESIGN.md §2.5) ---
+    @property
+    def n_shed(self) -> int:
+        """Requests rejected by admission."""
+        return int(self.metrics.value("admission.shed"))
+
+    @property
+    def n_preempted(self) -> int:
+        """Slot evictions (priority preemption)."""
+        return int(self.metrics.value("admission.preempted"))
+
+    # --- route-faithful drafting compute (DESIGN.md §2.4) ---
+    @property
+    def draft_calls(self) -> int:
+        """Total drafter token-decodes executed: the sum over cohorts and
+        nodes of K * |sub-batch|. With routed sub-batches this is ~k*B*K
+        per cohort; the legacy full fan-out paid N*B*K."""
+        return int(self.metrics.value("draft.calls"))
+
+    @property
+    def node_drafted(self) -> List[int]:
+        """node_drafted[i]: token-decodes node i executed (its routed
+        sub-batch sizes times the draft length, over cohorts+redrafts)."""
+        n = int(self.metrics.value("draft.n_nodes"))
+        return [int(self.metrics.value("draft.node_tokens", node=i))
+                for i in range(n)]
 
     @property
     def sim_ms(self) -> float:
@@ -134,16 +190,16 @@ class ServeStats:
     def verifier_busy_ms(self) -> float:
         """Verification + prefill forwards: everything occupying the
         verification server (matches the executor's verify StageClock)."""
-        return sum(r.verify_ms + r.prefill_ms for r in self.records)
+        return self.metrics.value("verify.busy_ms")
 
     @property
     def prefill_busy_ms(self) -> float:
-        return sum(r.prefill_ms for r in self.records)
+        return self.metrics.value("verify.prefill_ms")
 
     @property
     def verifier_idle_ms(self) -> float:
         """Total pipeline bubble time observed ahead of verifications."""
-        return sum(r.verify_idle_ms for r in self.records)
+        return self.metrics.value("verify.idle_ms")
 
     @property
     def verifier_utilization(self) -> float:
@@ -218,13 +274,21 @@ class SpeculativeEngine:
         self.drafter_domains = [d for _, _, d in drafters]
         self.lat = latency or LatencyModel()
         self.pool = RequestPool()
+        # telemetry (DESIGN.md §2.6): one registry + tracer per engine;
+        # the controllers share the registry's decision log
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(enabled=cosine.enable_tracing,
+                             max_spans=cosine.obs_max_events)
         self.router = AdaptiveRouter(len(self.drafters), cosine,
                                      self.target.embed_np, seed)
-        self.sched = RequestScheduler(cosine, self.lat)
-        self.admission = (AdmissionController(cosine, self.lat)
-                          if cosine.enable_admission else None)
-        self.stats = ServeStats()
+        self.sched = RequestScheduler(cosine, self.lat,
+                                      decisions=self.metrics.decisions)
+        self.admission = (AdmissionController(
+            cosine, self.lat, decisions=self.metrics.decisions)
+            if cosine.enable_admission else None)
+        self.stats = ServeStats(metrics=self.metrics)
         self.clock_ms = 0.0
+        self._cohort_seq = 0
         self.entry_logits: Dict[int, np.ndarray] = {}
         # rid -> simulated time its current committed context exists from
         # (arrival, then each commit); drafting a request earlier would
@@ -258,7 +322,17 @@ class SpeculativeEngine:
                           priority=priority)
         r.gamma = self.cfg.draft_len
         self.avail_ms[r.rid] = arrival_ms
+        self.tracer.mark("arrival", r.rid, arrival_ms, priority=priority,
+                         deadline_ms=r.deadline_ms,
+                         max_new_tokens=max_new_tokens)
         return r
+
+    def _next_cohort(self) -> int:
+        """Engine-global cohort sequence number (trace/decision join
+        key); monotone in host execution order, so deterministic."""
+        c = self._cohort_seq
+        self._cohort_seq += 1
+        return c
 
     # ----------------------------------------------------------- admission
     def _shed(self, r: Request, now_ms: float):
@@ -266,7 +340,8 @@ class SpeculativeEngine:
         held. Only zero-token requests are ever shed (the pool asserts),
         so nothing half-committed can leak out."""
         self.pool.shed_request(r.rid, now_ms)
-        self.stats.n_shed += 1
+        self.stats.note_shed()
+        self.tracer.mark("shed", r.rid, now_ms)
         if r.rid in self.entry_logits:
             self.target.drop(r.rid)
             for d in self.drafters:
@@ -275,7 +350,7 @@ class SpeculativeEngine:
         self.avail_ms.pop(r.rid, None)
         self.router.drop(r.rid)
 
-    def _preempt(self, r: Request):
+    def _preempt(self, r: Request, now_ms: float = 0.0):
         """Evict a lower-priority request's slots (admission preemption).
         Its committed stream stays intact in the pool; re-admission goes
         through `_ensure_prefilled`, which re-prefills prompt+generated
@@ -286,7 +361,9 @@ class SpeculativeEngine:
             d.drop(r.rid)
         self.entry_logits.pop(r.rid, None)
         r.n_preemptions += 1
-        self.stats.n_preempted += 1
+        self.stats.note_preempt()
+        self.tracer.mark("preempt", r.rid, now_ms,
+                         n_generated=len(r.generated))
 
     def _apply_admission(self, cands: List[Request], now_ms: float,
                          observation: Optional[PipelineObservation],
@@ -311,12 +388,18 @@ class SpeculativeEngine:
             self._shed(r, now_ms)
         preempted = {r.rid for r in dec.preempt}
         for r in dec.preempt:
-            self._preempt(r)
+            self._preempt(r, now_ms)
         return auto + [r for r in dec.admit if r.rid not in preempted]
 
-    def _ensure_prefilled(self, r: Request):
+    def _ensure_prefilled(self, r: Request, now_ms: Optional[float] = None):
         if r.rid in self.entry_logits:
             return
+        if r.n_preemptions > 0 and r.generated:
+            # a preemption victim re-entering: its re-prefill is charged
+            # by the caller; the lifecycle track records the re-admission
+            self.tracer.mark(
+                "readmit", r.rid,
+                self.clock_ms if now_ms is None else now_ms)
         ctx = list(r.prompt) + r.generated
         self.entry_logits[r.rid], _ = self.target.prefill_request(r.rid, ctx)
         if self.strategy != "ar":
@@ -705,6 +788,31 @@ class SpeculativeEngine:
             return self._step_ar(pending, t_pf)
         return self._step_coupled(pending, t_pf)
 
+    def _trace_coupled_record(self, rec: IterationRecord,
+                              rids: Tuple[int, ...]):
+        """Analytic-decomposition spans for the coupled baselines: the
+        verifier provably idles through draft + communication, so the
+        verify track tiles prefill → bubble(draft) → verify and the
+        aggregate draft track carries one draft span — the same schema
+        the pipelined strategies emit from their stage clocks, so the
+        export works for all five strategies."""
+        tr = self.tracer
+        if not tr.enabled:
+            return
+        t0, c = rec.t_start_ms, rec.cohort
+        if rec.prefill_ms > 0:
+            tr.span("prefill", STAGE, VERIFY, t0, t0 + rec.prefill_ms,
+                    cohort=c, rids=rids)
+        if rec.draft_ms > 0:
+            tr.span("draft", STAGE, DRAFT, rec.draft_start_ms,
+                    rec.draft_start_ms + rec.draft_ms, cohort=c, rids=rids)
+        if rec.verify_idle_ms > 0:
+            tr.span("bubble", STAGE, VERIFY, t0 + rec.prefill_ms,
+                    t0 + rec.prefill_ms + rec.verify_idle_ms,
+                    cohort=c, rids=rids, cause="draft")
+        tr.span("verify", STAGE, VERIFY, rec.verify_start_ms,
+                rec.verify_start_ms + rec.verify_ms, cohort=c, rids=rids)
+
     def _step_coupled(self, pending: List[Request],
                       prefill_ms: float = 0.0) -> IterationRecord:
         batch, gammas = self._plan_cohort(pending, now_ms=self.clock_ms)
@@ -727,6 +835,7 @@ class SpeculativeEngine:
                                             draft_b=b_draft)
         rec = IterationRecord(
             self.clock_ms, t_iter, b, big_gamma, total_committed, n_active,
+            cohort=self._next_cohort(),
             draft_start_ms=self.clock_ms + prefill_ms, draft_ms=t_ssm,
             verify_start_ms=self.clock_ms + prefill_ms + t_ssm
             + self.lat.comm_ms,
@@ -735,13 +844,15 @@ class SpeculativeEngine:
             # draft + communication phase every iteration (prefill is
             # server *busy* time, not idle)
             verify_idle_ms=t_ssm + self.lat.comm_ms)
+        self._trace_coupled_record(rec, tuple(r.rid for r in batch))
         self._finalize(batch, committed, rec)
         if self.strategy == "cosine":
             busy = t_llm / max(t_iter, 1e-9)
             for e in entries:
                 if not e.req.done:
                     self.sched.update_gamma_feedback(
-                        e.req, len(committed[e.req.rid]), busy)
+                        e.req, len(committed[e.req.rid]), busy,
+                        now_ms=self.clock_ms)
         return rec
 
     def _step_ar(self, pending: List[Request],
@@ -758,8 +869,10 @@ class SpeculativeEngine:
         l = max(r.context_len for r in batch)
         t_llm = self.lat.t_llm(b, l, b)
         rec = IterationRecord(self.clock_ms, t_llm + prefill_ms, b, b, b, 0,
+                              cohort=self._next_cohort(),
                               verify_start_ms=self.clock_ms + prefill_ms,
                               verify_ms=t_llm, prefill_ms=prefill_ms)
+        self._trace_coupled_record(rec, tuple(r.rid for r in batch))
         for r in batch:
             r.record_acceptance(1, 0)
         self._finalize(batch, committed, rec)
@@ -767,13 +880,19 @@ class SpeculativeEngine:
 
     def _finalize(self, batch, committed, rec: IterationRecord):
         self.clock_ms = rec.t_start_ms + rec.t_iter_ms
-        self.stats.records.append(rec)
-        self.stats.total_committed += rec.committed
-        self.stats.total_drafted += rec.big_gamma
+        self.stats.add_record(rec)
         for r in batch:
             toks = committed[r.rid]
+            # commit instant at the iteration's end time — exactly
+            # rec.t_start_ms + rec.t_iter_ms (tested against the record)
+            self.tracer.mark("commit", r.rid, self.clock_ms,
+                             cohort=rec.cohort, n_tokens=len(toks))
             if r.first_token_ms < 0 and toks:
                 r.first_token_ms = self.clock_ms
+                self.tracer.mark("first_token", r.rid, self.clock_ms,
+                                 cohort=rec.cohort)
+                self.metrics.observe(
+                    "serve.ttft_ms", self.clock_ms - r.arrival_ms)
             r.generated.extend(toks)
             hit_eos = self.eos is not None and self.eos in toks
             if len(r.generated) >= r.max_new_tokens or hit_eos:
@@ -784,6 +903,12 @@ class SpeculativeEngine:
                 self.entry_logits.pop(r.rid, None)
                 self.avail_ms.pop(r.rid, None)
                 self.router.drop(r.rid)
+                self.tracer.mark("complete", r.rid, self.clock_ms,
+                                 cohort=rec.cohort,
+                                 n_generated=len(r.generated))
+                self.metrics.inc("serve.completed")
+                self.metrics.observe(
+                    "serve.request_ms", self.clock_ms - r.arrival_ms)
             else:
                 self.avail_ms[r.rid] = self.clock_ms
 

@@ -12,13 +12,24 @@ Every state transition is appended to an `EventLog` with a global
 sequence number, so the interleaving of the two stages is a
 deterministic, inspectable trace: two runs of the same engine with the
 same seed must produce byte-identical event streams (tested in
-tests/test_pipeline.py).
+tests/test_pipeline.py). For long runs the log can be ring-bounded
+(`max_events`): the oldest events drop and `n_dropped` counts them (the
+cap unhit, determinism tests see the identical full stream).
+
+When a `Tracer` (obs/trace.py) is attached, every scheduled job also
+emits an occupancy span on the stage's track — and every measured idle
+gap an explicit ``bubble`` span carrying its cause — so the exported
+trace's per-stage busy/idle totals equal this clock's accounting exactly
+(DESIGN.md §2.6).
 """
 from __future__ import annotations
 
 import itertools
+from collections import deque
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import Deque, Optional, Tuple
+
+from repro.obs.trace import STAGE, Tracer
 
 DRAFT = "draft"
 VERIFY = "verify"
@@ -46,12 +57,17 @@ class Event:
 
 
 class EventLog:
-    def __init__(self):
-        self.events: List[Event] = []
+    def __init__(self, max_events: int = 0):
+        self.max_events = int(max_events)
+        self.events: Deque[Event] = deque(
+            maxlen=self.max_events if self.max_events > 0 else None)
         self._seq = itertools.count()
+        self.n_dropped = 0
 
     def emit(self, t_ms: float, stage: str, kind: str,
              rids: Tuple[int, ...] = (), info: str = "") -> Event:
+        if self.max_events > 0 and len(self.events) == self.max_events:
+            self.n_dropped += 1
         ev = Event(float(t_ms), next(self._seq), stage, kind,
                    tuple(int(r) for r in rids), info)
         self.events.append(ev)
@@ -74,6 +90,7 @@ class StageClock:
     """
     name: str
     log: Optional[EventLog] = None
+    tracer: Optional[Tracer] = None
     free_ms: float = 0.0
     busy_ms: float = 0.0
     idle_ms: float = 0.0
@@ -93,12 +110,16 @@ class StageClock:
 
     def schedule(self, duration_ms: float, not_before_ms: float = 0.0,
                  kind: str = "work", rids: Tuple[int, ...] = (),
-                 release_ms: Optional[float] = None):
+                 release_ms: Optional[float] = None,
+                 cohort: int = -1, cause: Optional[str] = None):
         """Run `duration_ms` of work; returns (start, end, idle_gap).
 
         release_ms: when the job actually became runnable, for the queue
         accounting only (defaults to not_before_ms). A job released
-        while the stage was still busy counts the gap as queue wait."""
+        while the stage was still busy counts the gap as queue wait.
+        cohort/cause: trace attribution — the cohort the job belongs to,
+        and what an idle gap ahead of it was waiting for (defaults to
+        the job's own kind)."""
         start = max(self.free_ms, not_before_ms)
         gap = start - self.free_ms
         end = start + duration_ms
@@ -110,13 +131,24 @@ class StageClock:
         if waited > 0.0:
             self.wait_ms += waited
             self.n_queued += 1
+        free_before = self.free_ms
         self.free_ms = end
         if self.log is not None:
             self.log.emit(start, self.name, f"{kind}_start", rids)
             self.log.emit(end, self.name, f"{kind}_end", rids)
+        if self.tracer is not None:
+            if gap > 0.0:
+                self.tracer.span("bubble", STAGE, self.name, free_before,
+                                 start, cohort=cohort, rids=rids,
+                                 cause=cause or kind)
+            self.tracer.span(kind, STAGE, self.name, start, end,
+                             cohort=cohort, rids=rids)
         return start, end, gap
 
     def busy_frac(self) -> float:
-        """Measured occupancy over the stage's active span."""
+        """Measured occupancy over the stage's active span. A stage that
+        was never scheduled reads 0.0 — it is idle capacity, not
+        saturation (a no-evidence default of 1.0 made never-used drafter
+        nodes look saturated to `plan()`'s drafter-feedback trim)."""
         span = self.busy_ms + self.idle_ms
-        return self.busy_ms / span if span > 0 else 1.0
+        return self.busy_ms / span if span > 0 else 0.0

@@ -68,6 +68,7 @@ class DraftJob:
     draft_ms: float
     ready_ms: float                      # arrival at the verification server
     n_active: int
+    cohort: int = -1                     # engine-global cohort seq (trace id)
     # per-drafter-node busy time spent on this cohort (draft + redrafts)
     node_busy: Dict[int, float] = field(default_factory=dict)
     n_straggler_side: int = 0
@@ -82,11 +83,12 @@ class PipelineExecutor:
 
     def __init__(self, engine):
         self.eng = engine
-        self.log = EventLog()
+        self.tracer = engine.tracer
+        self.log = EventLog(max_events=engine.cfg.obs_max_events)
         self.cluster = DrafterCluster(engine.drafter_profiles, engine.lat,
                                       engine.cfg, self.log,
-                                      seed=engine.seed)
-        self.verify = StageClock(VERIFY, self.log)
+                                      seed=engine.seed, tracer=self.tracer)
+        self.verify = StageClock(VERIFY, self.log, self.tracer)
         self.next_job: Optional[DraftJob] = None
         # measured verifier occupancy (EMA) consumed by Alg. 2's adaptive
         # speculation feedback; >1 means drafted work queued at the server
@@ -115,7 +117,7 @@ class PipelineExecutor:
         genuinely sitting in the queue)."""
         queued = 1 if (waiting is not None
                        and waiting.ready_ms < self._vfree_before) else 0
-        return PipelineObservation(
+        obs = PipelineObservation(
             verify_busy_frac=self.verify.busy_frac(),
             draft_busy_frac=self.cluster.aggregate_busy_frac(),
             queue_depth=queued,
@@ -123,6 +125,16 @@ class PipelineExecutor:
             drafter_busy_fracs=self.cluster.busy_fracs(),
             drafter_wait_fracs=self.cluster.wait_fracs(),
             spec_saturated=self.eng.sched.spec_saturated)
+        # mirror the measured state into the registry so the metrics
+        # export shows what the controllers last saw (DESIGN.md §2.6)
+        m = self.eng.metrics
+        m.set_gauge("pipeline.verify_busy_frac", obs.verify_busy_frac)
+        m.set_gauge("pipeline.draft_busy_frac", obs.draft_busy_frac)
+        m.set_gauge("pipeline.queue_depth", obs.queue_depth)
+        m.set_gauge("pipeline.backlog", obs.backlog)
+        for i, f in enumerate(obs.drafter_busy_fracs):
+            m.set_gauge("draft.node_busy_frac", f, node=i)
+        return obs
 
     def _observe_conf(self, entries) -> None:
         """Fold a drafted cohort's fused confidences into the EMA the
@@ -182,6 +194,7 @@ class PipelineExecutor:
             if not cands:
                 return None
             obs = self.observation(backlog=len(cands), waiting=prev)
+        cohort = eng._next_cohort()
         for r in cands:
             if r.rid not in eng.entry_logits:
                 # cold request: the prompt forward occupies the
@@ -191,10 +204,10 @@ class PipelineExecutor:
                 self.verify.park(avail(r))   # arrival lull != bubble
                 _, pend, _ = self.verify.schedule(
                     t_pf, not_before_ms=avail(r), kind="prefill",
-                    rids=(r.rid,))
+                    rids=(r.rid,), cohort=cohort)
                 eng.avail_ms[r.rid] = pend
                 self._prefill_acc_ms += t_pf
-            eng._ensure_prefilled(r)
+            eng._ensure_prefilled(r, now_ms=avail(r))
         extra = {r.rid: opt_ext(r) for r in cands if r.rid in inflight}
         batch, gammas = eng._plan_cohort(
             cands, observation=obs, extra_ctx=extra, now_ms=t_vis)
@@ -230,13 +243,14 @@ class PipelineExecutor:
                 e.assumed = [int(t) for t in inflight[e.req.rid].fused_t]
 
         self._observe_conf(entries)
-        sched = self.cluster.commit_cohort(plan, rids, kind="draft")
+        sched = self.cluster.commit_cohort(plan, rids, kind="draft",
+                                           cohort=cohort)
         for node, role in roles.items():
             eng.router.note_node_outcome(node, role)
         n_active = eng.n_active(entries)
         drops = [d.role for d in sched.drafts]
         return DraftJob(entries, sched.start_ms, sched.draft_ms,
-                        sched.ready_ms, n_active,
+                        sched.ready_ms, n_active, cohort=cohort,
                         node_busy=sched.node_busy(),
                         n_straggler_side=drops.count("side"),
                         n_straggler_dropped=drops.count("dropped"))
@@ -263,6 +277,7 @@ class PipelineExecutor:
                         and toks[-1] == int(e.fused_t[0]))
             if survives:
                 self.n_survived += 1
+                eng.metrics.inc("pipeline.survived")
                 shifted = eng._shift_entry(e)
                 if shifted is not None:
                     shifted.assumed = None    # now rooted at real state
@@ -280,6 +295,10 @@ class PipelineExecutor:
         if invalid:
             self.log.emit(t_known_ms, DRAFT, "invalidate",
                           tuple(r.rid for r in invalid))
+            eng.metrics.inc("pipeline.invalidated", len(invalid))
+            for r in invalid:
+                self.tracer.mark("invalidate", r.rid, t_known_ms,
+                                 cohort=ahead.cohort)
         if redo:
             gammas = eng._cohort_gammas(redo)
             K = max(gammas)
@@ -293,7 +312,8 @@ class PipelineExecutor:
                 parts=[plan.parts_by_req[r.rid] for r in redo], roles=roles)
             self._observe_conf(redo_entries)
             sched = self.cluster.commit_cohort(
-                plan, tuple(r.rid for r in redo), kind="redraft")
+                plan, tuple(r.rid for r in redo), kind="redraft",
+                cohort=ahead.cohort)
             for node, role in roles.items():
                 eng.router.note_node_outcome(node, role)
             n_active = eng.n_active(redo_entries)
@@ -335,7 +355,8 @@ class PipelineExecutor:
         vfree0 = self.verify.free_ms
         vstart, vend, bubble = self.verify.schedule(
             t_llm, not_before_ms=job.ready_ms, kind="verify",
-            rids=tuple(r.rid for r in batch))
+            rids=tuple(r.rid for r in batch), cohort=job.cohort,
+            cause="await_draft")
         self._vfree_before = vfree0
 
         # draft-ahead for the next iteration, concurrent with this verify
@@ -356,7 +377,7 @@ class PipelineExecutor:
         rec = IterationRecord(
             t_start_ms=t_start, t_iter_ms=vend - t_start,
             batch=b, big_gamma=big_gamma, committed=total_committed,
-            n_active_drafters=job.n_active,
+            n_active_drafters=job.n_active, cohort=job.cohort,
             draft_start_ms=job.draft_start_ms, draft_ms=job.draft_ms,
             verify_start_ms=vstart, verify_ms=t_llm,
             verify_idle_ms=bubble, prefill_ms=self._prefill_acc_ms,
@@ -373,7 +394,8 @@ class PipelineExecutor:
             for e in job.entries:
                 if not e.req.done:
                     eng.sched.update_gamma_feedback(
-                        e.req, len(committed[e.req.rid]), self.busy_ema)
+                        e.req, len(committed[e.req.rid]), self.busy_ema,
+                        now_ms=vend)
 
         # resolve the ahead cohort against what actually committed
         if ahead is not None:

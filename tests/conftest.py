@@ -38,6 +38,23 @@ def tiny_model_cfg(kind: str) -> ModelConfig:
                        **common)
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _bound_compiled_executables():
+    """Drop compiled-executable caches at module boundaries.
+
+    The full fast suite jit-compiles hundreds of tiny programs; letting
+    the executables accumulate for the whole run can segfault XLA:CPU's
+    JIT deep into the suite (observed in `model.apply`'s scan compile
+    during test_subbatch, identically with and without the newest test
+    modules). Clearing per module bounds that state; each module
+    recompiles its handful of tiny programs in seconds.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def trained_tiny():
     """Session fixture: a trained tiny target + 3 domain drafters (V=64,

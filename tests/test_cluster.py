@@ -17,7 +17,7 @@ from repro.core.latency_model import (DrafterProfile, LatencyModel,
 from repro.core.routing import AdaptiveRouter
 from repro.serving.cluster import DROPPED, FUSED, SIDE, DrafterCluster
 from repro.serving.engine import SpeculativeEngine
-from repro.serving.events import EventLog
+from repro.serving.events import EventLog, StageClock
 
 
 HETERO = (DrafterProfile(speed=1.0),
@@ -25,6 +25,20 @@ HETERO = (DrafterProfile(speed=1.0),
                          straggle_prob=0.5, straggle_factor=3.0))
 EXTREME = (DrafterProfile(speed=1.0),
            DrafterProfile(speed=8.0, straggle_prob=1.0, straggle_factor=5.0))
+
+
+def test_unscheduled_stage_clock_reads_zero_occupancy():
+    """Regression: a StageClock that never ran any work must report 0.0
+    busy fraction. The old 0/0 fallback read 1.0, which made never-used
+    drafter nodes look saturated to the scheduler's first observation."""
+    clk = StageClock("draft0", EventLog())
+    assert clk.busy_frac() == 0.0
+    # parking (arrival lull) accrues no idle and still reads 0.0
+    clk.park(500.0)
+    assert clk.busy_frac() == 0.0
+    # after real work the fraction is measured as before
+    clk.schedule(10.0, not_before_ms=510.0)
+    assert abs(clk.busy_frac() - 0.5) < 1e-12
 
 
 # ------------------------------------------------------------ pure cluster
