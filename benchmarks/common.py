@@ -33,16 +33,21 @@ class Fixture:
 
     def engine(self, strategy: str, cosine: CoSineConfig | None = None,
                n_drafters: int | None = None, seed: int = 0, max_len: int = 512,
-               drafters_override=None, drafter_profiles=None, **cos_kw):
+               drafters_override=None, drafter_profiles=None, backend=None,
+               **cos_kw):
         from repro.serving.engine import SpeculativeEngine
         drafters = (drafters_override if drafters_override is not None
                     else self.drafters[: (n_drafters or len(self.drafters))])
-        cos = cosine or CoSineConfig(
-            n_drafters=len(drafters), draft_len=5, drafters_per_request=2,
-            tree_width=2, **cos_kw)
+        if cosine is None:
+            kw = dict(n_drafters=len(drafters), draft_len=5,
+                      drafters_per_request=2, tree_width=2)
+            kw.update(cos_kw)
+            cosine = CoSineConfig(**kw)
+        cos = cosine
         return SpeculativeEngine(self.target, drafters, cos,
                                  strategy=strategy, max_len=max_len, seed=seed,
-                                 drafter_profiles=drafter_profiles)
+                                 drafter_profiles=drafter_profiles,
+                                 backend=backend)
 
 
 def build_fixture(steps_target: int = 500, steps_drafter: int = 300,

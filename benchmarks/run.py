@@ -22,6 +22,7 @@ BENCHES = [
     ("fig3b_confidence", "benchmarks.confidence_acceptance", True),
     ("fig6_offline_serving", "benchmarks.offline_serving", True),
     ("fig7_online_serving", "benchmarks.online_serving", True),
+    ("wallclock", "benchmarks.wallclock", True),
     ("traffic_slo", "benchmarks.traffic", True),
     ("table3_cost_efficiency", "benchmarks.cost_efficiency", True),
     ("ablation", "benchmarks.ablation", True),

@@ -1,0 +1,250 @@
+"""Wall-clock validation of the async serving loop against the
+discrete-event clocks (DESIGN.md §2.7): run the real `AsyncJaxBackend`
+and compare *measured* verifier overlap with what the simulated model
+predicts, on the same trained fixture.
+
+Two rows, each gating what it can honestly gate
+(`check_regression.py --prefix wallclock` vs BENCH_wallclock.json):
+
+  * **wallclock_pipelined** — loop mechanics in isolation: small
+    dispatch-bound models (one op must not saturate the host, else
+    concurrent drafting only contends) with the target serving as its
+    own drafter (acceptance ~= 1, so every draft-ahead survives).
+    Gates:
+      - `overlap_frac` (absolute floor): fraction of cohorts whose
+        drafting began before the previous verification finished —
+        structural evidence the draft/verify concurrency is physical
+        (a serial loop measures 0.0), immune to wall noise. This is
+        the silent-serialization catcher: a broken overlap would read
+        idle_ratio ~= 1.0 and still pass that ceiling;
+      - `idle_ratio` (absolute ceiling): measured verifier idle
+        fraction of the draft-ahead loop over the serial coupled
+        loop's on the identical workload, mean over alternating reps;
+        ~0.97 measured here (the strict < 1 demonstration lives in
+        tests/test_backend.py::test_async_overlap_beats_serial_idle),
+        the ceiling catches overlap turning actively harmful.
+  * **wallclock_serving** — the trained-drafter cosine deployment.
+    Gates:
+      - `lossless` (zero tolerance): async committed streams are
+        greedy-exact against the target reference;
+      - `overlap_gap` (absolute ceiling): |measured − predicted|
+        accounted verifier utilization (§2.2 busy/(busy+idle), the
+        same `vutil` the sim rows gate), where the prediction is the
+        simulated engine on the same workload driven by a LatencyModel
+        least-squares-fitted to this run's measured per-cohort
+        draft/verify durations (comm_ms=0 on one host).
+    Its `idle_ratio_real` is REPORTED, not gated: with this fixture's
+    ~2-3 tokens/chain acceptance, draft-ahead survival is ~10%, so the
+    overlapped loop redrafts most cohorts and its idle is not below
+    the serial loop's — the measured physics of speculation on a
+    shared host, worth tracking, wrong to gate.
+
+Wall-clock numbers are noisy (CI shares cores), so the gated metrics
+are either structural (overlap_frac) or absolute with generous
+margins; raw `us_per_call` is informational.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import CoSineConfig
+from repro.core.latency_model import LatencyModel
+
+
+def _greedy_reference(tcfg, tparams, prompt, n, max_len=512):
+    from repro.models import model as M
+    cache = M.init_cache(tcfg, 1, max_len, dtype=jnp.float32)
+    lg, cache, _ = M.prefill(tparams, tcfg, jnp.asarray(prompt)[None, :],
+                             cache)
+    last = np.asarray(lg[0, -1, :tcfg.vocab])
+    out = []
+    for _ in range(n):
+        t = int(np.argmax(last))
+        out.append(t)
+        lg, cache, _ = M.decode_step(tparams, tcfg, jnp.asarray([[t]]), cache)
+        last = np.asarray(lg[0, 0, :tcfg.vocab])
+    return out
+
+
+def _mechanics_models(vocab):
+    """Dispatch-bound models for the loop-mechanics row: small enough
+    that one op does not saturate the host's cores, so drafting in
+    parallel with an in-flight verification is physically free capacity
+    rather than contention. (With the fixture's d_model=256 target a
+    single forward already occupies every core and concurrent drafting
+    only contends — measured, see DESIGN.md §2.7.) Random init is fine:
+    the target drafts for itself, so acceptance is perfect regardless
+    of training."""
+    import jax
+
+    from repro.config import ModelConfig
+    from repro.models import model as M
+    cfg = ModelConfig(name="wallclock-mech", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                      d_ff=128, vocab=vocab, tie_embeddings=True,
+                      dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve_async(fixture, strategy, n_requests, max_new, dl,
+                 drafters_override=None, force_serial=False,
+                 target=None, max_len=512):
+    """One wall-clock run, burst arrival (the overlap question is about
+    steady-state pipelining, not arrival lulls)."""
+    if target is None:
+        eng = fixture.engine(strategy, backend="async", draft_len=dl,
+                             drafters_override=drafters_override)
+    else:
+        from repro.serving.engine import SpeculativeEngine
+        cos = CoSineConfig(n_drafters=len(drafters_override), draft_len=dl,
+                           drafters_per_request=2, tree_width=2)
+        eng = SpeculativeEngine(target, drafters_override, cos,
+                                strategy=strategy, max_len=max_len, seed=0,
+                                backend="async")
+    if force_serial:
+        eng.executor.overlap = False
+    for (p, dom) in fixture.corpus.prompts(n_requests, 16, seed=29):
+        eng.submit(p, max_new_tokens=max_new, domain=dom, arrival_ms=0.0)
+    iter_wall_s = []
+    for _ in range(10_000):
+        t0 = time.perf_counter()
+        if eng.step() is None:
+            break
+        iter_wall_s.append(time.perf_counter() - t0)
+    eng.backend.shutdown()
+    wall_us = float(np.median(iter_wall_s)) * 1e6 if iter_wall_s else 0.0
+    return eng, eng.stats, wall_us
+
+
+def _idle_frac(stats) -> float:
+    busy, idle = stats.verifier_busy_ms, stats.verifier_idle_ms
+    return idle / max(busy + idle, 1e-9)
+
+
+def _overlap_frac(stats) -> float:
+    """Fraction of cohort transitions where the next cohort's drafting
+    started before the previous verification finished — the structural
+    signature of draft/verify concurrency (serial loop: 0.0)."""
+    rs = stats.records
+    if len(rs) < 2:
+        return 0.0
+    hits = sum(
+        1 for prev, nxt in zip(rs, rs[1:])
+        if nxt.draft_start_ms < prev.verify_start_ms + prev.verify_ms)
+    return hits / (len(rs) - 1)
+
+
+def _busy_frac(stats) -> float:
+    """Accounted verifier utilization (§2.2: busy over busy+idle) — the
+    same ServeStats quantity the sim rows already gate as `vutil`,
+    computed identically for the measured and the simulated run."""
+    busy, idle = stats.verifier_busy_ms, stats.verifier_idle_ms
+    return busy / max(busy + idle, 1e-9)
+
+
+def _fit_latency_from(stats, ctx_len: float) -> LatencyModel:
+    """LatencyModel calibrated to this machine from the measured
+    per-cohort wall durations (host dispatch overhead included — that
+    IS the machine being modeled). Single host: comm_ms=0."""
+    lat = LatencyModel()
+    lat.comm_ms = 0.0
+    llm, ssm = [], []
+    for r in stats.records:
+        if r.verify_ms > 0:
+            llm.append((r.batch, ctx_len, r.big_gamma, r.verify_ms))
+        if r.draft_ms > 0 and r.batch > 0:
+            # per-request chain depth ~ tree nodes per request (exact
+            # for chain trees; a mild overcount with side branches)
+            ssm.append((r.batch, ctx_len, max(r.big_gamma // r.batch, 1),
+                        r.draft_ms))
+    if len(llm) >= 3:
+        lat.fit_llm(llm)
+    if len(ssm) >= 3:
+        lat.fit_ssm(ssm)
+    return lat
+
+
+def _predict_busy_frac(fixture, lat, n_requests, max_new, dl) -> float:
+    """The discrete-event prediction: the simulated engine on the same
+    workload, with the measured-calibrated LatencyModel."""
+    eng = fixture.engine("cosine", draft_len=dl)
+    eng.lat = lat
+    eng.executor.cluster.lat = lat
+    for (p, dom) in fixture.corpus.prompts(n_requests, 16, seed=29):
+        eng.submit(p, max_new_tokens=max_new, domain=dom, arrival_ms=0.0)
+    eng.run()
+    return _busy_frac(eng.stats)
+
+
+def run(fixture, quick: bool = False):
+    n_requests = 4 if quick else 8
+    max_new = 16 if quick else 24
+
+    rows = []
+
+    # ---- row 1: pipelined loop mechanics, perfect acceptance --------
+    # dispatch-bound models, and the target drafts for itself: every
+    # speculation survives, so the measurement isolates the loop
+    # discipline from drafter quality and from host-core contention
+    mcfg, mparams = _mechanics_models(fixture.vocab)
+    perfect = [(mcfg, mparams, d) for d in ("alpaca", "fiqa")]
+    common = dict(n_requests=8, max_new=32, dl=8,
+                  drafters_override=perfect, target=(mcfg, mparams),
+                  max_len=128)
+    # warm the jit caches with the exact measured shapes (compiles
+    # would otherwise inflate the first run's spans and bias the ratio)
+    _serve_async(fixture, "vanilla", **common)
+    _serve_async(fixture, "pipeinfer", **common)
+    # alternate measured reps so slow host drift cancels out of the
+    # ratio; the mean over reps is what the absolute gate sees
+    reps_serial, reps_over = [], []
+    wall_us = 0.0
+    for _ in range(2 if quick else 3):
+        _, s_serial, _ = _serve_async(fixture, "vanilla", **common)
+        _, s_over, wall_us = _serve_async(fixture, "pipeinfer", **common)
+        reps_serial.append(_idle_frac(s_serial))
+        reps_over.append(_idle_frac(s_over))
+    idle_serial = float(np.mean(reps_serial))
+    idle_over = float(np.mean(reps_over))
+    idle_ratio = idle_over / max(idle_serial, 1e-9)
+    rows.append(("wallclock_pipelined", wall_us,
+                 f"idle_ratio={idle_ratio:.3f};"
+                 f"overlap_frac={_overlap_frac(s_over):.3f};"
+                 f"idle_serial={idle_serial:.3f};"
+                 f"idle_overlap={idle_over:.3f}"))
+
+    # ---- row 2: realistic serving, trained drafters -----------------
+    common = dict(n_requests=n_requests, max_new=max_new, dl=5)
+    _serve_async(fixture, "cosine", **common)                  # warm
+    _serve_async(fixture, "cosine", force_serial=True, **common)
+    eng, s_cos, wall_us = _serve_async(fixture, "cosine", **common)
+    _, s_cos_ser, _ = _serve_async(fixture, "cosine", force_serial=True,
+                                   **common)
+
+    tcfg, tparams = fixture.target
+    comp = eng.pool.completed
+    lossless = float(
+        len(comp) == n_requests
+        and all(list(map(int, r.generated)) == _greedy_reference(
+            tcfg, tparams, r.prompt, len(r.generated))
+            for r in comp))
+
+    ctx_len = 16 + max_new / 2.0
+    lat = _fit_latency_from(s_cos, ctx_len)
+    pred = _predict_busy_frac(fixture, lat, n_requests, max_new, 5)
+    meas = _busy_frac(s_cos)
+    gap = abs(meas - pred)
+
+    rows.append((
+        "wallclock_serving", wall_us,
+        f"lossless={lossless:.0f};overlap_gap={gap:.3f};"
+        f"overlap_frac={_overlap_frac(s_cos):.3f};"
+        f"vutil_measured={meas:.3f};vutil_predicted={pred:.3f};"
+        f"idle_ratio_real="
+        f"{_idle_frac(s_cos) / max(_idle_frac(s_cos_ser), 1e-9):.3f};"
+        f"invalidated={s_cos.n_invalidated}"))
+    return rows

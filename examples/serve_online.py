@@ -5,6 +5,17 @@ stream through each baseline for comparison.
 
   PYTHONPATH=src python examples/serve_online.py [--requests 12] [--mode volatile]
 
+Per-request completions are surfaced *as tokens commit* (the engine's
+`on_commit` streaming hook), not after `run()` returns — watch the
+`done` lines interleave with the serving iterations.
+
+With `--backend async` the comparison table is replaced by a real
+asyncio front-end on the wall-clock `AsyncJaxBackend` (DESIGN.md §2.7):
+the engine loop runs in a thread, tokens stream into per-request
+asyncio queues as they commit, and each request's consumer prints its
+stream incrementally — the quickstart for the ROADMAP's "real async
+serving loop" item.
+
 With --trace [DIR], the cosine run's telemetry (DESIGN.md §2.6) is
 exported as DIR/serve_online_cosine.json — a Perfetto-loadable trace
 (load it at https://ui.perfetto.dev or chrome://tracing) plus a sibling
@@ -14,6 +25,7 @@ Summarize it in the terminal with:
   PYTHONPATH=src python -m repro.obs.summarize DIR/serve_online_cosine.json
 """
 import argparse
+import asyncio
 import os
 import sys
 
@@ -27,33 +39,25 @@ sys.path.insert(0, os.path.join(_ROOT, "benchmarks"))
 sys.path.insert(0, _ROOT)
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--mode", choices=["low", "high", "volatile"],
-                    default="volatile")
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--trace", type=str, nargs="?", const="traces",
-                    default=None, metavar="DIR",
-                    help="export the cosine run's Perfetto trace + "
-                         "metrics JSON into DIR (default ./traces)")
-    args = ap.parse_args()
+def _attach_completion_printer(eng):
+    """Print each request the moment its last token commits (streaming
+    surface of the non-async path; same hook the async front-end uses)."""
+    def on_commit(req, toks, now_ms):
+        if req.done:
+            print(f"    [t={now_ms:8.1f}ms] rid={req.rid} done "
+                  f"({len(req.generated)} tokens)")
+    eng.on_commit = on_commit
 
-    from common import build_fixture
-    from benchmarks.online_serving import make_arrivals
 
-    print("== loading fixture (trains + caches on first run) ==")
-    fx = build_fixture(verbose=True)
-
-    arrivals = make_arrivals(args.mode, args.requests, seed=5)
-    prompts = fx.corpus.prompts(args.requests, 16, seed=13)
-
+def run_sync(fx, args, arrivals, prompts):
     print(f"== {args.requests} requests, {args.mode} arrivals ==")
     header = f"{'strategy':<10} {'ms/token':>9} {'p95':>8} {'tok/s':>8} " \
              f"{'acc/iter':>9}"
     print(header)
     for strategy in ("ar", "vanilla", "specinfer", "pipeinfer", "cosine"):
         eng = fx.engine(strategy)
+        if args.stream:
+            _attach_completion_printer(eng)
         for (p, dom), t in zip(prompts, arrivals):
             eng.submit(p, max_new_tokens=args.max_new, domain=dom,
                        arrival_ms=float(t))
@@ -71,6 +75,95 @@ def main():
             print(f"  trace -> {path} (+ sibling .metrics.json)")
 
     print("\nper-domain routing learned by CoSine (request 0's M vector):")
+
+
+async def run_async(fx, args, arrivals, prompts):
+    """Asyncio front-end on the wall-clock backend: engine loop in a
+    worker thread, per-request token streams as asyncio queues fed from
+    the engine's on_commit hook."""
+    loop = asyncio.get_running_loop()
+    eng = fx.engine(args.strategy, backend="async")
+    queues = {}
+
+    def on_commit(req, toks, now_ms):
+        q = queues.get(req.rid)
+        if q is not None:
+            loop.call_soon_threadsafe(q.put_nowait, (list(toks), req.done))
+
+    eng.on_commit = on_commit
+
+    async def consume(rid, dom):
+        got, q = [], queues[rid]
+        while True:
+            toks, done = await q.get()
+            got.extend(toks)
+            print(f"  rid={rid} [{dom:>9}] +{len(toks):2d} tokens "
+                  f"({len(got):3d} total)" + ("  <done>" if done else ""))
+            if done:
+                return got
+
+    print(f"== async: {args.requests} requests, {args.strategy}, "
+          f"wall-clock backend ==")
+    for (p, dom), t in zip(prompts, arrivals):
+        r = eng.submit(p, max_new_tokens=args.max_new, domain=dom,
+                       arrival_ms=float(t))
+        queues[r.rid] = asyncio.Queue()
+    consumers = [asyncio.create_task(consume(r.rid, r.domain or "-"))
+                 for r in eng.pool.pending(float("inf"))]
+    stats = await loop.run_in_executor(None, eng.run)
+    await asyncio.gather(*consumers)
+    eng.backend.shutdown()
+
+    done = eng.pool.completed
+    lat = [(r.finish_ms - r.arrival_ms) / max(len(r.generated), 1)
+           for r in done]
+    print(f"\n{len(done)} completed | ms/token {np.mean(lat):.1f} "
+          f"(wall) | p95 {np.percentile(lat, 95):.1f} | "
+          f"verifier util {stats.verifier_utilization:.2f} | "
+          f"{stats.total_committed} tokens in {stats.sim_ms:.0f}ms wall")
+    if args.trace:
+        from repro.obs.export import export_engine_trace
+        os.makedirs(args.trace, exist_ok=True)
+        path = os.path.join(args.trace, "serve_online_async.json")
+        export_engine_trace(eng, path)
+        print(f"  trace -> {path} (+ sibling .metrics.json)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--mode", choices=["low", "high", "volatile"],
+                    default="volatile")
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--backend", choices=["sim", "async"], default="sim",
+                    help="sim: simulated-clock comparison across all "
+                         "strategies; async: wall-clock asyncio "
+                         "front-end with streaming tokens")
+    ap.add_argument("--strategy", default="cosine",
+                    choices=["vanilla", "specinfer", "pipeinfer", "cosine"],
+                    help="strategy for the async front-end")
+    ap.add_argument("--no-stream", dest="stream", action="store_false",
+                    help="suppress per-request completion lines in the "
+                         "sim comparison")
+    ap.add_argument("--trace", type=str, nargs="?", const="traces",
+                    default=None, metavar="DIR",
+                    help="export the cosine run's Perfetto trace + "
+                         "metrics JSON into DIR (default ./traces)")
+    args = ap.parse_args()
+
+    from common import build_fixture
+    from benchmarks.online_serving import make_arrivals
+
+    print("== loading fixture (trains + caches on first run) ==")
+    fx = build_fixture(verbose=True)
+
+    arrivals = make_arrivals(args.mode, args.requests, seed=5)
+    prompts = fx.corpus.prompts(args.requests, 16, seed=13)
+
+    if args.backend == "async":
+        asyncio.run(run_async(fx, args, arrivals, prompts))
+    else:
+        run_sync(fx, args, arrivals, prompts)
 
 
 if __name__ == "__main__":

@@ -314,6 +314,12 @@ class CoSineConfig:
     # the token-equivalence tests and as an explicit SpecInfer-style
     # ablation of the routing's compute saving.
     subbatch_drafting: bool = True
+    # burst admission (DESIGN.md §2.7): batch several cold requests'
+    # prompt forwards into one masked slot_extend write per model. Off
+    # by default to keep the per-request prefill call order
+    # byte-identical to the seed; the async backend always bursts (its
+    # prefill queue naturally coalesces cold arrivals).
+    batched_prefill: bool = False
     # ablation switches (paper §6.4)
     enable_routing: bool = True    # False -> random drafter selection
     enable_fusion: bool = True     # False -> independent per-drafter chains

@@ -53,6 +53,47 @@ class AdmissionDecision:
     preempt: List[Request] = field(default_factory=list)   # active victims
 
 
+class ServiceTimeEstimator:
+    """Measured per-token service time under the *current* load
+    (DESIGN.md §2.5): an EMA over observed iteration wall time divided
+    by the tokens it committed, scaled to one request's share of the
+    batch. The shed test consumes this instead of the analytic
+    single-request optimum `t_llm(1, l, min_gamma)`, which is wildly
+    optimistic exactly when admission matters — under saturation a cold
+    request shares the verifier with a full batch. Estimate changes
+    beyond 10% are recorded through the DecisionLog so the shed
+    decisions' evidence trail is auditable."""
+
+    def __init__(self, alpha: float = 0.3,
+                 decisions: Optional[DecisionLog] = None):
+        self.alpha = alpha
+        self.decisions = decisions
+        self.ms_per_tok: Optional[float] = None
+        self._logged: float = 0.0
+        self.n_obs = 0
+
+    def observe(self, iter_ms: float, committed: int, batch: int,
+                now_ms: float = 0.0) -> None:
+        """One serving iteration: `batch` requests shared `iter_ms` of
+        engine time and committed `committed` tokens, so one request's
+        marginal cost is iter_ms * batch / committed per token."""
+        if committed <= 0 or iter_ms <= 0:
+            return
+        obs = iter_ms * max(batch, 1) / committed
+        if self.ms_per_tok is None:
+            self.ms_per_tok = obs
+        else:
+            self.ms_per_tok += self.alpha * (obs - self.ms_per_tok)
+        self.n_obs += 1
+        if self.decisions is not None and (
+                self._logged <= 0.0
+                or abs(self.ms_per_tok - self._logged) > 0.1 * self._logged):
+            self.decisions.record(now_ms, "service_est",
+                                  ms_per_tok=self.ms_per_tok,
+                                  n_obs=self.n_obs)
+            self._logged = self.ms_per_tok
+
+
 class AdmissionController:
     def __init__(self, cfg: CoSineConfig, lat: LatencyModel,
                  decisions: Optional[DecisionLog] = None):
@@ -61,12 +102,21 @@ class AdmissionController:
         # controller decision log (DESIGN.md §2.6): each pass's verdict
         # is recorded with the saturation inputs it keyed on
         self.decisions = decisions
+        # measured service-time evidence, fed by engine._finalize
+        self.svc = ServiceTimeEstimator(decisions=decisions)
 
     # ----------------------------------------------------------- helpers
     def min_service_ms(self, r: Request) -> float:
-        """Optimistic time-to-first-token if the request were served
-        alone right now: its prefill plus one minimal verification."""
-        return (self.lat.t_prefill(r.context_len) + self.lat.comm_ms
+        """Time-to-first-token estimate for the shed test. With measured
+        evidence: prefill plus one committed token at the observed
+        ms/token under current load. Before any iteration has been
+        observed (cold start), the optimistic analytic bound — prefill
+        plus one minimal solo verification — so a fresh controller
+        never sheds on a guess."""
+        pf = self.lat.t_prefill(r.context_len)
+        if self.svc.ms_per_tok is not None:
+            return pf + self.svc.ms_per_tok
+        return (pf + self.lat.comm_ms
                 + self.lat.t_llm(1, r.context_len, self.cfg.min_gamma))
 
     @staticmethod
@@ -165,6 +215,8 @@ class AdmissionController:
                              if observation is not None else 0),
                 verify_busy_frac=(observation.verify_busy_frac
                                   if observation is not None else 0.0),
+                svc_ms_per_tok=(self.svc.ms_per_tok
+                                if self.svc.ms_per_tok is not None else -1.0),
                 admitted=tuple(r.rid for r in dec.admit),
                 queued=tuple(r.rid for r in dec.queued),
                 shed=tuple(r.rid for r in dec.shed),

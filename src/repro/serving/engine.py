@@ -41,7 +41,7 @@ same context the target verifies (DESIGN.md §1.1).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -58,8 +58,9 @@ from repro.core.scheduler import (PipelineObservation, RequestScheduler,
                                   adaptive_speculation)
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import STAGE, Tracer
+from repro.serving.backend import (ExecutionBackend, VerifyHandle,
+                                   make_backend)
 from repro.serving.events import DRAFT, VERIFY
-from repro.serving.runner import ModelRunner
 
 STRATEGIES = ("ar", "vanilla", "specinfer", "pipeinfer", "cosine")
 PIPELINED_STRATEGIES = ("pipeinfer", "cosine")
@@ -262,15 +263,26 @@ class SpeculativeEngine:
                  latency: Optional[LatencyModel] = None,
                  max_len: int = 512, seed: int = 0,
                  eos_token: Optional[int] = None,
-                 drafter_profiles: Optional[Sequence[DrafterProfile]] = None):
+                 drafter_profiles: Optional[Sequence[DrafterProfile]] = None,
+                 backend=None):
         assert strategy in STRATEGIES, strategy
         self.strategy = strategy
         self.cfg = cosine
         self.eos = eos_token
         self.seed = seed
-        self.target_cfg, target_params = target
-        self.target = ModelRunner(self.target_cfg, target_params, max_len)
-        self.drafters = [ModelRunner(c, p, max_len) for c, p, _ in drafters]
+        self.target_cfg = target[0]
+        # engine/backend split (DESIGN.md §2.7): the backend owns the
+        # runners, the caches and the serving clock; `backend` is "sim"
+        # (default — the discrete-event seed behaviour), "async" (the
+        # wall-clock AsyncJaxBackend) or a ready ExecutionBackend.
+        # `self.target`/`self.drafters` stay as runner aliases for
+        # calibration and tests; the serving path goes through
+        # `self.backend` only.
+        self.backend: ExecutionBackend = make_backend(
+            backend, target, drafters, max_len)
+        self.backend.bind(self)
+        self.target = self.backend.target
+        self.drafters = self.backend.drafters
         self.drafter_domains = [d for _, _, d in drafters]
         self.lat = latency or LatencyModel()
         self.pool = RequestPool()
@@ -302,9 +314,23 @@ class SpeculativeEngine:
         assert len(self.drafter_profiles) == len(self.drafters)
         # SSM/hybrid verifiers cannot apply tree masks -> chain-only trees
         self.tree_capable = self.target_cfg.family not in ("ssm", "hybrid")
-        if strategy in PIPELINED_STRATEGIES:
+        # streaming hook: called as on_commit(request, tokens, now_ms)
+        # after every commit (request.done already reflects completion)
+        self.on_commit: Optional[Callable] = None
+        # wall-clock backends commit the target cache asynchronously on
+        # the verification server; the returned tail logits are only
+        # consumed by the *next* acceptance walk, so they resolve lazily
+        self._tails_fut = None
+        if self.backend.is_wallclock:
+            assert strategy != "ar", \
+                "async backend serves speculative strategies; use the " \
+                "simulated backend for the ar baseline"
+            from repro.serving.async_loop import WallClockExecutor
+            self.executor = WallClockExecutor(
+                self, overlap=strategy in PIPELINED_STRATEGIES)
+        elif strategy in PIPELINED_STRATEGIES:
             from repro.serving.pipeline import PipelineExecutor
-            self.executor: Optional[PipelineExecutor] = PipelineExecutor(self)
+            self.executor = PipelineExecutor(self)
         else:
             self.executor = None
 
@@ -342,13 +368,15 @@ class SpeculativeEngine:
         self.pool.shed_request(r.rid, now_ms)
         self.stats.note_shed()
         self.tracer.mark("shed", r.rid, now_ms)
-        if r.rid in self.entry_logits:
-            self.target.drop(r.rid)
-            for d in self.drafters:
-                d.drop(r.rid)
-            self.entry_logits.pop(r.rid, None)
+        # unconditional: a no-op for never-prefilled rids, and under the
+        # async backend it also cleans a slot a still-queued burst
+        # prefill may be about to admit (the drop serializes behind it)
+        self.backend.drop_request(r.rid)
+        self.entry_logits.pop(r.rid, None)
         self.avail_ms.pop(r.rid, None)
         self.router.drop(r.rid)
+        if self.executor is not None:
+            self.executor.note_dropped(r.rid)
 
     def _preempt(self, r: Request, now_ms: float = 0.0):
         """Evict a lower-priority request's slots (admission preemption).
@@ -356,10 +384,10 @@ class SpeculativeEngine:
         through `_ensure_prefilled`, which re-prefills prompt+generated
         (paying that prefill on the verify stage) — the cheap slot
         evict/re-admit path."""
-        self.target.drop(r.rid)
-        for d in self.drafters:
-            d.drop(r.rid)
+        self.backend.drop_request(r.rid)
         self.entry_logits.pop(r.rid, None)
+        if self.executor is not None:
+            self.executor.note_dropped(r.rid)
         r.n_preemptions += 1
         self.stats.note_preempt()
         self.tracer.mark("preempt", r.rid, now_ms,
@@ -401,19 +429,47 @@ class SpeculativeEngine:
                 "readmit", r.rid,
                 self.clock_ms if now_ms is None else now_ms)
         ctx = list(r.prompt) + r.generated
-        self.entry_logits[r.rid], _ = self.target.prefill_request(r.rid, ctx)
+        res = self.backend.prefill_target({r.rid: ctx})
+        self.entry_logits[r.rid] = res[r.rid][0]
         if self.strategy != "ar":
             # drafters stay one token behind the committed stream so the
             # draft loop's first decode(prev) feeds ctx[-1] exactly once
             # (an empty d_ctx — single-token prompt — admits a bare slot)
-            d_ctx = ctx[:-1]
-            lls = []
-            for d in self.drafters:
-                _, ll = d.prefill_request(r.rid, d_ctx)
-                lls.append(ll)
+            lls = self.backend.prefill_drafters({r.rid: ctx[:-1]})[r.rid]
             if self.strategy == "cosine" and self.cfg.enable_routing:
                 # content-based routing prior (paper §5 request analysis)
                 self.router.set_prior(r.rid, lls)
+
+    def _ensure_prefilled_batch(self, rs: List[Request],
+                                now_of: Optional[Dict[int, float]] = None):
+        """Burst admission (DESIGN.md §2.7): prefill several cold
+        requests through one masked `slot_extend` write per model when
+        `cfg.batched_prefill` is on; otherwise the per-request path in
+        submission order (the seed's byte-identical behaviour). Timing
+        is charged by the caller either way — this only batches the
+        token computation."""
+        rs = [r for r in rs if r.rid not in self.entry_logits]
+        if not rs:
+            return
+        now_of = now_of or {}
+        if not self.cfg.batched_prefill or len(rs) == 1:
+            for r in rs:
+                self._ensure_prefilled(r, now_ms=now_of.get(r.rid))
+            return
+        for r in rs:
+            if r.n_preemptions > 0 and r.generated:
+                self.tracer.mark("readmit", r.rid,
+                                 now_of.get(r.rid, self.clock_ms))
+        ctxs = {r.rid: list(r.prompt) + r.generated for r in rs}
+        res = self.backend.prefill_target(ctxs, batched=True)
+        for rid, (lg, _) in res.items():
+            self.entry_logits[rid] = lg
+        if self.strategy != "ar":
+            d_ctx = {rid: c[:-1] for rid, c in ctxs.items()}
+            lls = self.backend.prefill_drafters(d_ctx, batched=True)
+            if self.strategy == "cosine" and self.cfg.enable_routing:
+                for rid in ctxs:
+                    self.router.set_prior(rid, lls[rid])
 
     # ------------------------------------------------------------ planning
     def _plan_cohort(self, cands: List[Request],
@@ -575,8 +631,8 @@ class SpeculativeEngine:
         # only its routed rids; the snapshots are decoded on and then
         # discarded (= rollback) — the slot-resident caches only advance
         # at commit time.
-        temp = {di: self.drafters[di].speculative_caches(
-            [rids[b] for b in rows_of[di]]) for di in active}
+        temp = {di: self.backend.draft_snapshot(
+            di, [rids[b] for b in rows_of[di]]) for di in active}
 
         prev_last = np.array([(r.generated[-1] if r.generated
                                else int(r.prompt[-1])) for r in batch],
@@ -594,8 +650,7 @@ class SpeculativeEngine:
                 t_rows = teach[di][rows]
                 feed = np.concatenate([prev_last[rows][:, None],
                                        t_rows[:, :-1]], axis=1)
-                _, temp[di] = self.drafters[di].extend_snapshot(temp[di],
-                                                               feed)
+                temp[di] = self.backend.draft_extend(di, temp[di], feed)
                 prev_node[di] = t_rows[:, -1].astype(np.int32).copy()
 
         # drafter-compute accounting: each node pays K steps over its own
@@ -614,8 +669,8 @@ class SpeculativeEngine:
             step_confs = np.full((N, B), -1.0, np.float32)
             for di in active:
                 rows = rows_of[di]
-                lg, temp[di] = self.drafters[di].decode(
-                    [rids[b] for b in rows], prev_node[di], caches=temp[di])
+                lg, temp[di] = self.backend.draft_decode(
+                    di, [rids[b] for b in rows], prev_node[di], temp[di])
                 probs = jax.nn.softmax(jnp.asarray(lg), -1)
                 tok = np.asarray(jnp.argmax(probs, -1))
                 conf = np.asarray(jnp.take_along_axis(
@@ -702,17 +757,49 @@ class SpeculativeEngine:
                           d_chains=e.d_chains[:, 1:], parts=e.parts)
 
     # ------------------------------------------------------------ verify
-    def _verify_commit(self, entries: List[DraftEntry]):
-        """Batched tree verification + commit: greedy acceptance walk,
-        router update, cache extension (target exact, drafters one-behind)
-        and tail entry logits. Returns (committed, total_committed)."""
-        batch = [e.req for e in entries]
+    def _verify_dispatch(self, entries: List[DraftEntry]) -> VerifyHandle:
+        """Start the batched tree-verification forward for a cohort. On
+        the simulated backend the forward runs synchronously here; on the
+        async backend it is in flight on the verification server while
+        the caller drafts ahead."""
         trees = [e.tree for e in entries]
         M_nodes = max(t.n_nodes for t in trees)
         padded = tree_mod.pad_trees(trees, M_nodes)
-        rids = [r.rid for r in batch]
-        node_logits = self.target.verify(rids, padded["tokens"],
-                                         padded["rel_pos"], padded["mask"])
+        rids = [e.req.rid for e in entries]
+        return self.backend.verify_dispatch(rids, padded["tokens"],
+                                            padded["rel_pos"],
+                                            padded["mask"])
+
+    def _resolve_tails(self) -> None:
+        """Land the pending async commit's tail logits. Rids that left
+        the engine since the commit was queued (completed, shed or
+        preempted — their entry_logits entry was popped) are skipped so
+        a stale tail can never resurrect a dropped request's state."""
+        fut = self._tails_fut
+        if fut is None:
+            return
+        self._tails_fut = None
+        for rid, lg in fut.result().items():
+            if rid in self.entry_logits:
+                self.entry_logits[rid] = np.asarray(lg)
+
+    def _verify_commit(self, entries: List[DraftEntry],
+                       handle: Optional[VerifyHandle] = None):
+        """Batched tree verification + commit: greedy acceptance walk,
+        router update, cache extension (target exact, drafters one-behind)
+        and tail entry logits. Returns (committed, total_committed).
+
+        `handle` carries an already-dispatched verification (wall-clock
+        pipelining); without one the forward is dispatched inline — the
+        seed's synchronous call order."""
+        batch = [e.req for e in entries]
+        trees = [e.tree for e in entries]
+        if handle is None:
+            handle = self._verify_dispatch(entries)
+        node_logits = handle.result()
+        # previous commit's tail logits must land before the walk below
+        # reads entry_logits (async backends defer the commit forward)
+        self._resolve_tails()
 
         prev_last = {r.rid: (r.generated[-1] if r.generated
                              else int(r.prompt[-1])) for r in batch}
@@ -737,16 +824,22 @@ class SpeculativeEngine:
                 self.router.update(r.rid, e.d_toks, e.d_confs, toks, e.parts)
 
         # ---- commit to target + drafters ----
-        tails = self.target.extend_committed(committed)
-        for rid, lg in tails.items():
-            self.entry_logits[rid] = lg
+        if self.backend.is_wallclock:
+            # queue the commit forward on the verification server: it
+            # overlaps the drafter commit + next draft on this thread,
+            # and worker FIFO order guarantees it lands in the target
+            # cache before the next verification reads the slots
+            self._tails_fut = self.backend.commit_target_async(committed)
+        else:
+            tails = self.backend.commit_target(committed)
+            for rid, lg in tails.items():
+                self.entry_logits[rid] = lg
         if self.drafters:
             # one-behind invariant: drafters absorb the previously-held-back
             # token plus all but the last newly committed one
             d_committed = {rid: [prev_last[rid]] + toks[:-1]
                            for rid, toks in committed.items()}
-            for d in self.drafters:
-                d.extend_committed(d_committed)
+            self.backend.commit_drafters(d_committed)
         return committed, total_committed
 
     # ------------------------------------------------------------ one step
@@ -781,8 +874,7 @@ class SpeculativeEngine:
         # apples-to-apples across all five strategies (ROADMAP item)
         cold = [r for r in pending if r.rid not in self.entry_logits]
         t_pf = sum(self.lat.t_prefill(r.context_len) for r in cold)
-        for r in pending:
-            self._ensure_prefilled(r)
+        self._ensure_prefilled_batch(pending)
 
         if self.strategy == "ar":
             return self._step_ar(pending, t_pf)
@@ -862,7 +954,7 @@ class SpeculativeEngine:
         for r in batch:
             tok = int(np.argmax(self.entry_logits[r.rid]))
             committed[r.rid] = [tok]
-        tails = self.target.extend_committed(committed)
+        tails = self.backend.commit_target(committed)
         for rid, lg in tails.items():
             self.entry_logits[rid] = lg
         b = len(batch)
@@ -881,6 +973,11 @@ class SpeculativeEngine:
     def _finalize(self, batch, committed, rec: IterationRecord):
         self.clock_ms = rec.t_start_ms + rec.t_iter_ms
         self.stats.add_record(rec)
+        if self.admission is not None and rec.committed > 0:
+            # measured service-time evidence for the shed test (ms/token
+            # under the *current* load, not the analytic optimum)
+            self.admission.svc.observe(rec.t_iter_ms, rec.committed,
+                                       rec.batch, now_ms=self.clock_ms)
         for r in batch:
             toks = committed[r.rid]
             # commit instant at the iteration's end time — exactly
@@ -897,9 +994,7 @@ class SpeculativeEngine:
             hit_eos = self.eos is not None and self.eos in toks
             if len(r.generated) >= r.max_new_tokens or hit_eos:
                 self.pool.finish(r.rid, self.clock_ms)
-                self.target.drop(r.rid)
-                for d in self.drafters:
-                    d.drop(r.rid)
+                self.backend.drop_request(r.rid)
                 self.entry_logits.pop(r.rid, None)
                 self.avail_ms.pop(r.rid, None)
                 self.router.drop(r.rid)
@@ -911,6 +1006,10 @@ class SpeculativeEngine:
                     "serve.request_ms", self.clock_ms - r.arrival_ms)
             else:
                 self.avail_ms[r.rid] = self.clock_ms
+            if self.on_commit is not None and toks:
+                # after completion handling, so a streaming consumer
+                # that keys on req.done sees it set on the final commit
+                self.on_commit(r, toks, self.clock_ms)
 
     def run(self, max_iterations: int = 10_000) -> ServeStats:
         for _ in range(max_iterations):

@@ -109,6 +109,11 @@ class PipelineExecutor:
         self._vfree_before = 0.0
 
     # --------------------------------------------------------------- state
+    def note_dropped(self, rid: int) -> None:
+        """Shed/preempt notification (the wall-clock executor invalidates
+        pending prefills here; the simulated pipeline holds no per-request
+        executor state)."""
+
     def observation(self, backlog: int = 0,
                     waiting: Optional[DraftJob] = None) -> PipelineObservation:
         """`waiting` is a drafted cohort not yet picked up by the server;
@@ -195,19 +200,20 @@ class PipelineExecutor:
                 return None
             obs = self.observation(backlog=len(cands), waiting=prev)
         cohort = eng._next_cohort()
-        for r in cands:
-            if r.rid not in eng.entry_logits:
-                # cold request: the prompt forward occupies the
-                # verification server and gates drafting, so TTFT is
-                # honest under bursty arrivals (no free prefills)
-                t_pf = eng.lat.t_prefill(r.context_len)
-                self.verify.park(avail(r))   # arrival lull != bubble
-                _, pend, _ = self.verify.schedule(
-                    t_pf, not_before_ms=avail(r), kind="prefill",
-                    rids=(r.rid,), cohort=cohort)
-                eng.avail_ms[r.rid] = pend
-                self._prefill_acc_ms += t_pf
-            eng._ensure_prefilled(r, now_ms=avail(r))
+        cold = [r for r in cands if r.rid not in eng.entry_logits]
+        for r in cold:
+            # cold request: the prompt forward occupies the
+            # verification server and gates drafting, so TTFT is
+            # honest under bursty arrivals (no free prefills)
+            t_pf = eng.lat.t_prefill(r.context_len)
+            self.verify.park(avail(r))   # arrival lull != bubble
+            _, pend, _ = self.verify.schedule(
+                t_pf, not_before_ms=avail(r), kind="prefill",
+                rids=(r.rid,), cohort=cohort)
+            eng.avail_ms[r.rid] = pend
+            self._prefill_acc_ms += t_pf
+        eng._ensure_prefilled_batch(
+            cold, now_of={r.rid: avail(r) for r in cold})
         extra = {r.rid: opt_ext(r) for r in cands if r.rid in inflight}
         batch, gammas = eng._plan_cohort(
             cands, observation=obs, extra_ctx=extra, now_ms=t_vis)

@@ -177,6 +177,9 @@ class ModelRunner:
         self.cache_dtype = cache_dtype
         self.slots = SlotCacheManager(cfg, max_len, n_slots, cache_dtype)
         self.embed_np = np.asarray(params["embed"][: cfg.vocab], np.float32)
+        # masked slot_extend writes issued by the prefill paths (the
+        # burst-admission test asserts batched prefill issues fewer)
+        self.n_prefill_writes = 0
 
         self._jit_decode = partial(_g_decode, cfg=cfg)
         self._jit_extend_plain = partial(_g_extend_plain, cfg=cfg)
@@ -221,6 +224,7 @@ class ModelRunner:
             logits, self.slots.cache, _ = self._jit_slot_extend(
                 self.params, tokens=jnp.asarray(seg), cache=self.slots.cache,
                 slot_idx=sidx, token_mask=jnp.asarray(mask))
+            self.n_prefill_writes += 1
             # likelihood of the *next* tokens within this chunk
             nxt = toks[i + 1: i + n_real]
             if len(nxt):
@@ -233,6 +237,60 @@ class ModelRunner:
         mean_ll = ll_sum / max(ll_n, 1)
         # n_real is the final chunk's real-token count after the loop
         return np.asarray(logits[0, n_real - 1, : self.cfg.vocab]), mean_ll
+
+    def prefill_requests(self, reqs: Dict[int, Sequence[int]]
+                         ) -> Dict[int, tuple]:
+        """Burst admission: prefill several cold requests with ONE masked
+        `slot_extend` write — each request is a row, prompts padded to
+        the common bucketed width with the pad masked out (the same
+        suffix-pad mechanism the chunked single-request path uses per
+        row). Prompts longer than one chunk, empty contexts (one-behind
+        drafter caches of single-token prompts) and singleton bursts
+        fall back to `prefill_request`. Returns {rid: (last-position
+        logits, mean next-token logprob)}."""
+        out: Dict[int, tuple] = {}
+        chunk_len = min(prefill_chunk_len(self.cfg), self.max_len)
+        batch: Dict[int, np.ndarray] = {}
+        for rid, tokens in reqs.items():
+            toks = np.asarray(tokens, np.int32)
+            if 0 < len(toks) <= chunk_len:
+                batch[rid] = toks
+            else:
+                out[rid] = self.prefill_request(rid, toks)
+        if len(batch) == 1:
+            rid, toks = next(iter(batch.items()))
+            out[rid] = self.prefill_request(rid, toks)
+            return out
+        if not batch:
+            return out
+        for rid in batch:
+            self.slots.admit(rid)
+        rids = list(batch)
+        sidx = self.slots.padded_idx(rids)
+        rows = int(sidx.shape[0])
+        maxn = max(len(t) for t in batch.values())
+        width = min(prefill_bucket(maxn), chunk_len)
+        seg = np.zeros((rows, width), np.int32)
+        mask = np.zeros((rows, width), bool)
+        for j, rid in enumerate(rids):
+            t = batch[rid]
+            seg[j, : len(t)] = t
+            mask[j, : len(t)] = True
+        logits, self.slots.cache, _ = self._jit_slot_extend(
+            self.params, tokens=jnp.asarray(seg), cache=self.slots.cache,
+            slot_idx=sidx, token_mask=jnp.asarray(mask))
+        self.n_prefill_writes += 1
+        lp = np.asarray(jax.nn.log_softmax(
+            logits[:, :, : self.cfg.vocab], -1))
+        for j, rid in enumerate(rids):
+            t = batch[rid]
+            n = len(t)
+            nxt = t[1:]
+            ll = (float(np.take_along_axis(
+                lp[j, : n - 1], nxt[:, None], -1).sum()) / (n - 1)
+                if n > 1 else 0.0)
+            out[rid] = (np.asarray(logits[j, n - 1, : self.cfg.vocab]), ll)
+        return out
 
     def drop(self, rid: int):
         self.slots.release(rid)
@@ -287,12 +345,12 @@ class ModelRunner:
             new_cache = None
         return np.asarray(lg[:B, 0, : self.cfg.vocab]), new_cache
 
-    def verify(self, rids: Sequence[int], tokens: np.ndarray,
-               rel_pos: np.ndarray, seg_mask: np.ndarray) -> np.ndarray:
-        """Tree/chain verification (no cache commit).
-
-        tokens: (B, Gmax); rel_pos: (B, Gmax) node depths; seg_mask
-        (B, Gmax, Gmax) ancestor mask. Returns logits (B, Gmax, V)."""
+    def verify_device(self, rids: Sequence[int], tokens: np.ndarray,
+                      rel_pos: np.ndarray, seg_mask: np.ndarray):
+        """Tree/chain verification forward, result left on device (rows
+        x Gmax x padded vocab) — the async backend's worker dispatches
+        this and defers the host transfer (`device_get`) until the
+        acceptance walk actually consumes the logits."""
         B, G = tokens.shape
         sidx = self.slots.padded_idx(rids)
         rows = int(sidx.shape[0])
@@ -302,7 +360,7 @@ class ModelRunner:
             mask = np.concatenate(
                 [mask, np.broadcast_to(np.tril(np.ones((G, G), bool)),
                                        (rows - B, G, G))], axis=0)
-        lg = self._jit_slot_verify(
+        return self._jit_slot_verify(
             self.params,
             tokens=jnp.asarray(self._pad_rows(np.asarray(tokens, np.int32),
                                               rows)),
@@ -310,6 +368,15 @@ class ModelRunner:
             rel_pos=jnp.asarray(self._pad_rows(np.asarray(rel_pos, np.int32),
                                                rows)),
             seg_mask=jnp.asarray(mask))
+
+    def verify(self, rids: Sequence[int], tokens: np.ndarray,
+               rel_pos: np.ndarray, seg_mask: np.ndarray) -> np.ndarray:
+        """Tree/chain verification (no cache commit).
+
+        tokens: (B, Gmax); rel_pos: (B, Gmax) node depths; seg_mask
+        (B, Gmax, Gmax) ancestor mask. Returns logits (B, Gmax, V)."""
+        B = tokens.shape[0]
+        lg = self.verify_device(rids, tokens, rel_pos, seg_mask)
         return np.asarray(lg[:B, :, : self.cfg.vocab])
 
     def extend_committed(self, rid_tokens: Dict[int, List[int]]) -> Dict[int, np.ndarray]:

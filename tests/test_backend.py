@@ -1,0 +1,293 @@
+"""Backend contract (serving/backend.py, DESIGN.md §2.7).
+
+SimulatedBackend: the engine speaking the ExecutionBackend interface
+must be byte-identical same-seed — committed tokens, ServeStats and the
+trace export are deterministic functions of (workload, seed) with no
+dependence on how the backend instance was constructed. Burst admission
+(`batched_prefill`) coalesces cold prompt forwards into one masked
+slot_extend write per model with identical tokens.
+
+AsyncJaxBackend: the wall-clock loop is lossless (greedy-exact against
+the AR reference, attention + SSM targets, admission/preemption churn
+included) and demonstrates *real* overlap — measured verifier idle with
+draft-ahead below the serial coupled loop's on the same workload.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import TINY_MAX_LEN as MAX_LEN, tiny_model_cfg as _tiny
+from repro.config import CoSineConfig, ModelConfig
+from repro.models import model as M
+from repro.obs.export import build_trace
+from repro.serving.backend import (AsyncJaxBackend, SimulatedBackend,
+                                   make_backend)
+from repro.serving.engine import SpeculativeEngine
+
+
+@pytest.fixture(scope="module")
+def models():
+    tcfg = _tiny("attn")
+    scfg = _tiny("ssm")
+    key = jax.random.PRNGKey(0)
+    tparams = M.init_params(key, tcfg)
+    sparams = M.init_params(key, scfg)
+    dcfg = ModelConfig(name="tiny-draft", family="dense", n_layers=1,
+                       d_model=48, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=96, vocab=50, tie_embeddings=True,
+                       dtype="float32")
+    drafters = [(dcfg, M.init_params(jax.random.PRNGKey(i + 1), dcfg), f"d{i}")
+                for i in range(2)]
+    return {"attn": (tcfg, tparams), "ssm": (scfg, sparams),
+            "drafters": drafters}
+
+
+def _greedy_reference(cfg, params, prompt, n):
+    cache = M.init_cache(cfg, 1, MAX_LEN, dtype=jnp.float32)
+    lg, cache, _ = M.prefill(params, cfg, jnp.asarray(prompt)[None, :], cache)
+    last = np.asarray(lg[0, -1, :cfg.vocab])
+    out = []
+    for _ in range(n):
+        t = int(np.argmax(last))
+        out.append(t)
+        lg, cache, _ = M.decode_step(params, cfg, jnp.asarray([[t]]), cache)
+        last = np.asarray(lg[0, 0, :cfg.vocab])
+    return out
+
+
+def _engine(models, family, strategy, seed=0, backend=None, **cos_kw):
+    kw = dict(n_drafters=2, draft_len=4, drafters_per_request=2,
+              tree_width=2)
+    kw.update(cos_kw)
+    cos = CoSineConfig(**kw)
+    return SpeculativeEngine(models[family], models["drafters"], cos,
+                             strategy=strategy, max_len=MAX_LEN, seed=seed,
+                             backend=backend)
+
+
+def _prompts(n, rng_seed=3, length=8):
+    rng = np.random.default_rng(rng_seed)
+    return [rng.integers(1, 50, length).tolist() for _ in range(n)]
+
+
+def _run(eng, prompts, max_new=10, arrivals=None):
+    arrivals = arrivals or [0.0] * len(prompts)
+    reqs = [eng.submit(p, max_new_tokens=max_new, arrival_ms=t)
+            for p, t in zip(prompts, arrivals)]
+    stats = eng.run()
+    eng.backend.shutdown()
+    return reqs, stats
+
+
+def _stats_key(stats):
+    """The ServeStats surface the fig7 bench reports, exactly."""
+    return (stats.total_committed, stats.total_drafted, stats.draft_calls,
+            stats.sim_ms, stats.verifier_busy_ms, stats.verifier_idle_ms,
+            stats.n_invalidated,
+            [(r.t_start_ms, r.t_iter_ms, r.batch, r.big_gamma, r.committed,
+              r.verify_start_ms, r.verify_ms, r.verify_idle_ms,
+              r.prefill_ms) for r in stats.records])
+
+
+def _trace_key(tracer):
+    t = build_trace(tracer)
+    return [(e.get("name"), e.get("ph"), e.get("ts"), e.get("dur"),
+             e.get("tid")) for e in t["traceEvents"]]
+
+
+# ----------------------------------------------------- simulated: identity
+def test_make_backend_resolution(models):
+    t, ds = models["attn"], models["drafters"]
+    assert isinstance(make_backend(None, t, ds, MAX_LEN), SimulatedBackend)
+    assert isinstance(make_backend("sim", t, ds, MAX_LEN), SimulatedBackend)
+    b = make_backend("async", t, ds, MAX_LEN)
+    assert isinstance(b, AsyncJaxBackend)
+    b.shutdown()
+    assert make_backend(b, t, ds, MAX_LEN) is b
+    with pytest.raises(ValueError):
+        make_backend("gpu", t, ds, MAX_LEN)
+
+
+@pytest.mark.parametrize("strategy", ["cosine", "pipeinfer", "vanilla", "ar"])
+def test_sim_backend_byte_identical_same_seed(models, strategy):
+    """The fig7 identity contract: tokens, ServeStats records and the
+    trace export are pure functions of (workload, seed) through the
+    backend interface — two constructions can never diverge."""
+    outs = []
+    for spec in (None, "sim"):
+        eng = _engine(models, "attn", strategy, backend=spec)
+        reqs, stats = _run(eng, _prompts(3), max_new=8,
+                           arrivals=[0.0, 40.0, 200.0])
+        outs.append(([list(map(int, r.generated)) for r in reqs],
+                     _stats_key(stats), _trace_key(eng.tracer)))
+    assert outs[0][0] == outs[1][0]
+    assert outs[0][1] == outs[1][1]
+    assert outs[0][2] == outs[1][2]
+
+
+@pytest.mark.parametrize("family", ["attn", "ssm"])
+def test_burst_prefill_identical_tokens_fewer_writes(models, family):
+    """Burst admission: with `batched_prefill` a burst of cold arrivals
+    shares one masked slot_extend write per model; tokens are identical
+    and the target issues strictly fewer prefill writes."""
+    results = {}
+    for batched in (False, True):
+        eng = _engine(models, family, "cosine", batched_prefill=batched)
+        reqs, _ = _run(eng, _prompts(4, rng_seed=5), max_new=8)
+        results[batched] = ([list(map(int, r.generated)) for r in reqs],
+                            eng.target.n_prefill_writes)
+    assert results[True][0] == results[False][0]
+    assert results[True][1] < results[False][1]
+
+
+def test_burst_prefill_single_cold_falls_back(models):
+    """A lone cold request takes the per-request path even with
+    `batched_prefill` on — no shape churn for the common case."""
+    eng = _engine(models, "attn", "cosine", batched_prefill=True)
+    reqs, _ = _run(eng, _prompts(1), max_new=6)
+    (tcfg, tparams) = models["attn"]
+    assert list(map(int, reqs[0].generated)) == _greedy_reference(
+        tcfg, tparams, reqs[0].prompt, 6)
+
+
+# -------------------------------------------------------- async: lossless
+@pytest.mark.parametrize("family", ["attn", "ssm"])
+@pytest.mark.parametrize("strategy", ["cosine", "pipeinfer"])
+def test_async_backend_lossless(models, family, strategy):
+    cfg, params = models[family]
+    prompts = _prompts(3)
+    eng = _engine(models, family, strategy, backend="async")
+    reqs, stats = _run(eng, prompts, max_new=10)
+    for r, p in zip(reqs, prompts):
+        assert r.done
+        assert list(map(int, r.generated)) == _greedy_reference(
+            cfg, params, p, 10), strategy
+    # wall-clock records are measured, not booked
+    assert stats.records and all(r.verify_ms > 0 for r in stats.records)
+    assert all(r.t_iter_ms >= 0 for r in stats.records)
+
+
+def test_async_backend_lossless_under_churn(models):
+    """Admission churn (tight batch, priorities, preemption + shed
+    pressure) on the wall-clock loop: every request that completes is
+    still greedy-exact."""
+    cfg, params = models["attn"]
+    cos = CoSineConfig(n_drafters=2, draft_len=4, drafters_per_request=2,
+                       tree_width=2, enable_admission=True, max_batch=2,
+                       admit_queue_cap=2, preempt_priority=True,
+                       default_slo_ms=1e6)
+    eng = SpeculativeEngine(models["attn"], models["drafters"], cos,
+                            strategy="cosine", max_len=MAX_LEN, seed=0,
+                            backend="async")
+    prompts = _prompts(5, rng_seed=9)
+    reqs = [eng.submit(p, max_new_tokens=8, arrival_ms=0.0,
+                       priority=i % 3) for i, p in enumerate(prompts)]
+    stats = eng.run()
+    eng.backend.shutdown()
+    done = [(r, p) for r, p in zip(reqs, prompts) if r.done]
+    assert done, "churn shed everything — config too tight"
+    for r, p in done:
+        assert list(map(int, r.generated)) == _greedy_reference(
+            cfg, params, p, 8)
+    assert stats.total_committed >= sum(len(r.generated) for r, _ in done)
+
+
+def test_async_preemption_readmit_lossless(models):
+    """A preempted request re-prefills prompt+generated through the
+    async burst-prefill queue; its final stream must still be exact."""
+    cfg, params = models["attn"]
+    cos = CoSineConfig(n_drafters=2, draft_len=4, drafters_per_request=2,
+                       tree_width=2, enable_admission=True, max_batch=1,
+                       preempt_priority=True, default_slo_ms=1e6)
+    eng = SpeculativeEngine(models["attn"], models["drafters"], cos,
+                            strategy="cosine", max_len=MAX_LEN, seed=0,
+                            backend="async")
+    prompts = _prompts(3, rng_seed=11)
+    # low-priority first, then high-priority arrivals that displace it
+    reqs = [eng.submit(prompts[0], max_new_tokens=10, priority=2),
+            eng.submit(prompts[1], max_new_tokens=10, priority=0),
+            eng.submit(prompts[2], max_new_tokens=10, priority=0)]
+    eng.run()
+    eng.backend.shutdown()
+    for r, p in zip(reqs, prompts):
+        if r.done:
+            assert list(map(int, r.generated)) == _greedy_reference(
+                cfg, params, p, 10)
+
+
+# --------------------------------------------------------- async: overlap
+@pytest.mark.slow
+def test_async_overlap_beats_serial_idle(models):
+    """The acceptance criterion, measured for real: on a draft-bound
+    workload the draft-ahead wall-clock loop keeps the verification
+    server busier than the serial coupled loop (draft, then verify,
+    alternating on the same thread).
+
+    The target serves as its own drafter so every draft-ahead survives
+    (acceptance ~= 1): the measurement isolates the loop discipline
+    from drafter quality — with weak drafters most speculations are
+    redrafted and the overlap win is eaten by the redraft cost, which
+    is speculation physics, not a loop defect. The tiny test models
+    are dispatch-bound — one op does not saturate the host's cores —
+    which is the regime where concurrent drafting is free capacity
+    instead of contention (the bench-fixture-sized target loses the
+    margin to exactly that contention; DESIGN.md §2.7). Each strategy
+    gets a warm-up run at the exact measured shapes so jit compiles
+    never land inside a measured span, and measured reps alternate so
+    host drift cancels out of the mean."""
+    tcfg, tparams = models["attn"]
+    perfect = [(tcfg, tparams, f"d{i}") for i in range(2)]
+
+    def serve(strategy):
+        cos = CoSineConfig(n_drafters=2, draft_len=8,
+                           drafters_per_request=2, tree_width=2)
+        eng = SpeculativeEngine(models["attn"], perfect, cos,
+                                strategy=strategy, max_len=MAX_LEN,
+                                seed=0, backend="async")
+        _, stats = _run(eng, _prompts(8, rng_seed=13), max_new=32)
+        busy, idle = stats.verifier_busy_ms, stats.verifier_idle_ms
+        return idle / max(busy + idle, 1e-9), stats
+
+    serve("vanilla")                   # warm-up: compile at these shapes
+    serve("pipeinfer")
+    serial_reps, over_reps = [], []
+    for _ in range(3):
+        s, _ = serve("vanilla")        # overlap=False: draft blocks verify
+        o, stats = serve("pipeinfer")
+        serial_reps.append(s)
+        over_reps.append(o)
+    serial = float(np.mean(serial_reps))
+    overlapped = float(np.mean(over_reps))
+    assert overlapped < serial, (over_reps, serial_reps)
+
+    # structural check, immune to wall noise: most cohorts began
+    # drafting before the previous verification finished
+    rs = stats.records
+    hits = sum(1 for prev, nxt in zip(rs, rs[1:])
+               if nxt.draft_start_ms < prev.verify_start_ms + prev.verify_ms)
+    assert hits / (len(rs) - 1) > 0.5, (hits, len(rs))
+
+
+def test_async_wallclock_monotone_and_streaming(models):
+    """Wall-clock sanity: commits arrive in nondecreasing wall time, the
+    on_commit streaming hook sees every committed token once as it
+    commits, and the final commit observes req.done already set (a
+    streaming consumer keyed on it must terminate — the asyncio
+    front-end in examples/serve_online.py hangs otherwise)."""
+    eng = _engine(models, "attn", "cosine", backend="async")
+    seen = {}
+    times = []
+    done_at = {}
+
+    def on_commit(req, toks, now_ms):
+        seen.setdefault(req.rid, []).extend(toks)
+        times.append(now_ms)
+        done_at[req.rid] = req.done
+
+    eng.on_commit = on_commit
+    reqs, _ = _run(eng, _prompts(2), max_new=8)
+    assert times == sorted(times)
+    for r in reqs:
+        assert seen[r.rid] == list(r.generated)
+        assert done_at[r.rid] is True
