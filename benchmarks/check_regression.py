@@ -17,6 +17,9 @@ are runner-dependent noise and are reported but never gated):
   * accounted / lossless -- zero-tolerance overload invariants: every
                    submitted request completed-or-shed, surviving streams
                    bit-identical to the target's greedy reference
+  * traffic_frac / residency_x -- paged-pool rows (``paged`` prefix):
+                   decode-view traffic must stay ∝ tokens held and the
+                   fixed-memory residency multiple must not drop
 
 Wall-clock rows (benchmarks/wallclock.py, ``--prefix wallclock``) are
 instead gated with ABSOLUTE bounds (ABS_GATES): measured overlap must
@@ -60,6 +63,14 @@ GATES = {
     # streams must match the target's greedy reference exactly
     "accounted": ("down", 0.0),
     "lossless": ("down", 0.0),
+    # --- paged-pool rows (benchmarks/kernel_bench.bench_paged_pool) ---
+    # fraction of reserved per-slot capacity the paged decode view
+    # actually streams: the tentpole claim is traffic ∝ tokens held, so
+    # a rise means the view is over-covering (e.g. bucket inflation)
+    "traffic_frac": ("up", 0.10),
+    # requests resident at fixed cache memory vs the reserved layout; a
+    # drop means the pool started burning pages it does not need
+    "residency_x": ("down", 0.10),
 }
 # metric -> (bound, threshold): ABSOLUTE gates for the wall-clock rows
 # (benchmarks/wallclock.py), where run-to-run wall noise makes relative
@@ -96,6 +107,11 @@ REPORT_ONLY = (
     "slo_frac",
     "n_shed",
     "n_preempted",
+    # paged-pool rows: wall ratio is host noise; fragmentation and the
+    # absolute held-token count are informational
+    "paged_vs_slot_x",
+    "fragmentation",
+    "held_tokens",
 )
 ROW_FMT = "{:<36} {:<12} {:>10} {:>10} {:>8}  {}"
 
@@ -254,7 +270,7 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", required=True, help="checked-in baseline JSON")
     ap.add_argument(
         "--prefix",
-        default="fig7,traffic",
+        default="fig7,traffic,paged",
         help="comma-separated name prefixes to gate (kernel wall-times are noise)",
     )
     ap.add_argument(

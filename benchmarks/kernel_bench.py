@@ -11,8 +11,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                decode_attention_paged)
+from repro.kernels.decode_attention.ref import (decode_attention_paged_ref,
+                                                decode_attention_ref)
 from repro.kernels.ssd_scan.ops import ssd
 from repro.kernels.ssd_scan.ref import ssd_reference
 from repro.kernels.tree_attention.ops import tree_attention
@@ -63,8 +65,25 @@ def run(fixture=None, quick=False):
     us_k = _time(ssd, x, dt, A, Bm, Cm, chunk=64, interpret=True)
     us_r = _time(ssd_reference, x, dt, A, Bm, Cm)
     rows.append(("kernel_ssd_scan_interp", us_k, f"ref_us={us_r:.0f}"))
+
+    # paged decode kernel: block-table walk vs gather-then-dense oracle
+    ps, npg, nv = 64, 18, 8
+    kp = jax.random.normal(jax.random.PRNGKey(11), (npg, H, ps, D))
+    vp = jax.random.normal(jax.random.PRNGKey(12), (npg, H, ps, D))
+    ppos = jnp.where(jnp.arange(npg)[:, None] >= 2,
+                     (jnp.arange(npg)[:, None] - 2) * ps
+                     + jnp.arange(ps)[None], -1).astype(jnp.int32)
+    tbl = (2 + jnp.arange(B * nv, dtype=jnp.int32)).reshape(B, nv)
+    qp3 = jnp.full((B,), nv * ps - 1, jnp.int32)
+    us_k = _time(decode_attention_paged, q2, kp, vp, ppos, qp3, tbl,
+                 scale=0.125, interpret=True)
+    us_r = _time(decode_attention_paged_ref, q2, kp, vp, ppos, qp3, tbl,
+                 scale=0.125)
+    rows.append(("kernel_decode_paged_interp", us_k, f"ref_us={us_r:.0f}"))
+
     rows.extend(bench_slot_cache())
     rows.extend(bench_write_path(quick=quick))
+    rows.extend(bench_paged_pool(quick=quick))
     return rows
 
 
@@ -235,3 +254,85 @@ def bench_write_path(B: int = 8, max_len: int = 2048, n_slots: int = 16,
     return [(f"serving_write_path_b{B}_len{max_len}", us_in,
              f"gather_scatter_us={us_sc:.0f};"
              f"inplace_vs_scatter_x={us_sc / max(us_in, 1e-9):.2f}")]
+
+
+def bench_paged_pool(B: int = 8, max_len: int = 2048, n_slots: int = 16,
+                     page_size: int = 64, prompt_len: int = 64,
+                     iters: int = 20, quick: bool = False):
+    """Paged pool (DESIGN.md §2.8) vs reserved-capacity slot cache at the
+    bandwidth-bound shape of `bench_write_path`.
+
+    Two rows, both gated against the checked-in baseline:
+
+      paged_decode_* — decode traffic ∝ tokens HELD: `traffic_frac` is
+          the fraction of the reserved per-slot capacity the paged view
+          actually streams per step (n_view pages / capacity); the
+          resident path always reads the full capacity (frac 1.0). Also
+          checks `lossless` (paged decode logits bitwise equal to the
+          resident path, zero tolerance) and reports the wall ratio
+          (`paged_vs_slot_x`, host-noise — report-only).
+
+      paged_residency_* — requests resident at FIXED cache memory:
+          the resident cache burns max_len rows per slot regardless of
+          occupancy; the pool burns only each request's mapped pages.
+          `residency_x` = how many more requests of this length fit in
+          the same token-row footprint (>= 1.0; gated against drops).
+    """
+    from repro.config import ModelConfig
+    from repro.models import model as M
+    from repro.serving.runner import ModelRunner
+
+    if quick:
+        iters = 8
+    cfg = ModelConfig(name="bench-paged", family="dense", n_layers=8,
+                      d_model=128, n_heads=8, n_kv_heads=4, head_dim=32,
+                      d_ff=256, vocab=128, tie_embeddings=True,
+                      dtype="float32")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, prompt_len) for _ in range(B)]
+
+    res = ModelRunner(cfg, params, max_len=max_len, n_slots=n_slots)
+    pag = ModelRunner(cfg, params, max_len=max_len, n_slots=n_slots,
+                      paged=True, page_size=page_size)
+    rids = list(range(B))
+    for r in rids:
+        res.prefill_request(r, prompts[r])
+        pag.prefill_request(r, prompts[r])
+    tok = np.zeros((B,), np.int32)
+
+    def loop(runner):
+        lg = None
+        for _ in range(iters):
+            lg, _ = runner.decode(rids, tok)
+        jax.block_until_ready(runner.slots.cache["lengths"])
+        return lg
+
+    def timed(runner):
+        loop(runner)                   # warmup/compile
+        t0 = time.time()
+        lg = loop(runner)
+        return (time.time() - t0) / iters * 1e6, lg
+
+    us_res, lg_res = timed(res)
+    us_pag, lg_pag = timed(pag)
+    lossless = float(np.array_equal(np.asarray(lg_res), np.asarray(lg_pag)))
+
+    # decode-read traffic: columns the next step's view streams per
+    # request, as a fraction of the reserved per-slot capacity
+    view_cols = int(pag.slots.prepare(rids, write=0).shape[1]) * page_size
+    traffic_frac = view_cols / max_len
+
+    # residency at fixed memory: token rows one request pins
+    held = max(pag.slots.pages_held() // B, 1) * page_size
+    residency_x = max_len / held
+    frag = pag.slots.fragmentation()
+
+    return [
+        (f"paged_decode_b{B}_len{max_len}", us_pag,
+         f"slot_us={us_res:.0f};paged_vs_slot_x={us_res / max(us_pag, 1e-9):.2f};"
+         f"traffic_frac={traffic_frac:.4f};lossless={lossless:.0f}"),
+        (f"paged_residency_len{max_len}", 0.0,
+         f"held_tokens={held};residency_x={residency_x:.2f};"
+         f"fragmentation={frag:.4f}"),
+    ]

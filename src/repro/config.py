@@ -329,3 +329,18 @@ class CoSineConfig:
     # entries drop; drop counts are surfaced in the metrics export)
     enable_tracing: bool = True
     obs_max_events: int = 0
+    # --- paged KV/SSM pool (DESIGN.md §2.8) ---
+    # paged_pool=True swaps the reserved-capacity slot cache (one
+    # `bucket x max_len` row per resident request) for a fixed-size page
+    # pool + per-request block tables: attention/MLA KV is allocated in
+    # `page_size`-token pages on demand, reads gather only the pages a
+    # request actually holds, and admission/eviction/rollback become
+    # block-table operations. SSM state stays slot-indexed (it is O(1)
+    # per request already). False (default) keeps the resident path
+    # byte-identical to PR 8.
+    paged_pool: bool = False
+    page_size: int = 64            # tokens per KV page (must divide the
+    #                                ring capacity of windowed layers)
+    pool_pages: int = 0            # pages pre-allocated per model pool
+    #                                (0 -> small auto size; the pool grows
+    #                                by doubling when the free list empties)

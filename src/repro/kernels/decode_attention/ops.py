@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import flash_attention_partial, merge_partials
+from repro.kernels.decode_attention.kernel import paged_flash_decode
 
 
 @partial(jax.jit, static_argnames=("scale", "window", "interpret", "block_k"))
@@ -43,3 +44,26 @@ def decode_attention_slots(q, k_cache, v_cache, cache_pos, q_pos, slot_idx,
     cp = jnp.take(cache_pos, slot_idx, axis=0)
     return decode_attention(q, k, v, cp, q_pos, scale=scale, window=window,
                             interpret=interpret, block_k=block_k)
+
+
+@partial(jax.jit, static_argnames=("scale", "window", "interpret"))
+def decode_attention_paged(q, k_pages, v_pages, page_pos, q_pos,
+                           block_tables, *, scale, window=0, interpret=True):
+    """Paged flash decode: the KV cache is a physical page *pool*
+    (DESIGN.md §2.8) and each request reads only the pages named by its
+    block table. Unlike `decode_attention_slots` (where XLA gathers the
+    resident rows), the block table here is a scalar-prefetch operand
+    and the Pallas grid walks it directly — the kernel never touches
+    unmapped pages, so decode-read traffic scales with tokens *held*,
+    not pool capacity.
+
+    q: (B, Hkv, G, Dk); k_pages/v_pages: (P, Hkv, ps, Dk/Dv);
+    page_pos: (P, ps) absolute positions (-1 = empty row, exact no-op);
+    q_pos: (B,); block_tables: (B, n_view) int32 physical page ids
+    (point unmapped entries at a NULL page whose page_pos is all -1).
+    Returns (B, Hkv, G, Dv) f32, matching `decode_attention_paged_ref`.
+    """
+    part = paged_flash_decode(q, k_pages, v_pages, page_pos, q_pos,
+                              block_tables, scale=scale, window=window,
+                              interpret=interpret)
+    return merge_partials([part])

@@ -33,3 +33,18 @@ def decode_attention_slots_ref(q, k_cache, v_cache, cache_pos, q_pos,
     cp = jnp.take(cache_pos, slot_idx, axis=0)
     return decode_attention_ref(q, k, v, cp, q_pos, scale=scale,
                                 window=window)
+
+
+def decode_attention_paged_ref(q, k_pages, v_pages, page_pos, q_pos,
+                               block_tables, *, scale, window=0):
+    """Oracle for the paged read: gather each request's pages by its
+    block table into a contiguous (B, Hkv, n_view*ps, D) view, then run
+    the dense decode oracle. k_pages/v_pages: (P, Hkv, ps, Dk/Dv);
+    page_pos: (P, ps); block_tables: (B, n_view) int32."""
+    def _view(pages):
+        g = jnp.take(pages, block_tables, axis=0)      # (B, nv, H, ps, D)
+        g = jnp.moveaxis(g, 2, 1)                      # (B, H, nv, ps, D)
+        return g.reshape(g.shape[0], g.shape[1], -1, g.shape[-1])
+    cp = jnp.take(page_pos, block_tables, axis=0).reshape(q.shape[0], -1)
+    return decode_attention_ref(q, _view(k_pages), _view(v_pages), cp, q_pos,
+                                scale=scale, window=window)

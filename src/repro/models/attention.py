@@ -10,6 +10,15 @@ KV caches are dicts of arrays (pytrees):
 Ring caches (sliding window) write at `pos % C`; masking is always done
 against `slot_pos`, so eviction is correctness-preserving as long as
 C >= window + max_segment (we allocate window + 128).
+
+Paged pools (DESIGN.md §2.8) use the same leaf names but a page axis:
+  {"k": (P, ps, Hkv, Dk), "v": (P, ps, Hkv, Dv), "slot_pos": (P, ps)}
+where P = number of physical pages and ps = tokens per page. A request
+owns an ordered list of pages (its block table); `take_rows` with a
+`page_view` (B, n_view) int32 table gathers the view into exactly the
+resident layout above with C = n_view * ps, so every attention routine
+below runs unchanged on paged caches. Unmapped view entries point at a
+reserved NULL page whose slot_pos stays -1 (masked like any empty slot).
 """
 from __future__ import annotations
 
@@ -208,6 +217,39 @@ def make_kv_cache(batch, capacity, n_kv, dk, dv=None, dtype=jnp.bfloat16,
     return c
 
 
+def make_paged_kv_cache(n_pages, page_size, n_kv, dk, dv=None,
+                        dtype=jnp.bfloat16, quantized=False):
+    """Physical page pool for one attention sub-layer (DESIGN.md §2.8).
+
+    Same leaves as `make_kv_cache` but laid out per page:
+    (n_pages, page_size, ...). slot_pos starts at -1 everywhere so a page
+    is invisible to reads until real rows are written into it.
+    """
+    dv = dv or dk
+    store = jnp.int8 if quantized else dtype
+    c = {
+        "k": jnp.zeros((n_pages, page_size, n_kv, dk), store),
+        "v": jnp.zeros((n_pages, page_size, n_kv, dv), store),
+        "slot_pos": jnp.full((n_pages, page_size), -1, jnp.int32),
+    }
+    if quantized:
+        c["k_scale"] = jnp.zeros((n_pages, page_size, n_kv), jnp.float32)
+        c["v_scale"] = jnp.zeros((n_pages, page_size, n_kv), jnp.float32)
+    return c
+
+
+def make_paged_mla_cache(n_pages, page_size, cfg: ModelConfig,
+                         dtype=jnp.bfloat16):
+    """Paged variant of `make_mla_cache` (latent KV pages)."""
+    m = cfg.mla
+    return {
+        "k": jnp.zeros((n_pages, page_size, 1,
+                        m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        "v": jnp.zeros((n_pages, page_size, 1, m.kv_lora_rank), dtype),
+        "slot_pos": jnp.full((n_pages, page_size), -1, jnp.int32),
+    }
+
+
 def _quantize(x):
     """Symmetric per-(token, head) int8 quantization. x: (B,T,H,D)."""
     scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
@@ -265,18 +307,38 @@ def write_kv(cache, k_new, v_new, positions):
     return set_rows(cache, kv_rows(cache, k_new, v_new, positions), positions)
 
 
-def take_rows(cache, slot_idx):
-    """Slot-indexed gather of the active rows of a resident cache (read
-    path: attention only ever *reads* the B gathered rows; write deltas
-    are scattered at the top of the jitted step, touching new tokens
-    only)."""
+def take_rows(cache, slot_idx, page_view=None):
+    """Gather the active rows of a resident or paged cache (read path).
+
+    slot pool (page_view=None): slot-indexed gather of the B active rows;
+    attention only ever *reads* the gathered rows, write deltas are
+    scattered at the top of the jitted step, touching new tokens only.
+
+    paged pool (page_view (B, n_view) int32): `cache` leaves have leading
+    (n_pages, page_size); the gather assembles each request's mapped
+    pages into a (B, n_view * page_size, ...) sub-cache — exactly the
+    resident layout with capacity C = n_view * ps, so downstream
+    attention is unchanged. Read traffic is ∝ pages actually held (the
+    view), not pool capacity.
+    """
+    if page_view is not None:
+        B, nv = page_view.shape
+        ps = cache["slot_pos"].shape[-1]
+        rows = (page_view[:, :, None] * ps
+                + jnp.arange(ps, dtype=page_view.dtype)).reshape(B, nv * ps)
+        out = {}
+        for key, val in cache.items():
+            flat = val.reshape((val.shape[0] * val.shape[1],) + val.shape[2:])
+            out[key] = jnp.take(flat, rows, axis=0)
+        return out
     if slot_idx is None:
         return cache
     return {k: jnp.take(v, slot_idx, axis=0) for k, v in cache.items()}
 
 
 def _attend_cached(qg, k_new, v_new, cache, positions, *, scale, window,
-                   block, seg_mask, slot_idx, write, par, token_mask=None):
+                   block, seg_mask, slot_idx, write, par, token_mask=None,
+                   page_view=None):
     """Shared cache-backed attention core for GQA and MLA.
 
     Gathers the active rows (slot pool or plain batch), optionally writes
@@ -289,16 +351,22 @@ def _attend_cached(qg, k_new, v_new, cache, positions, *, scale, window,
     token_mask: (B, T) bool — suffix shape-padding rows (False) are
     written with slot_pos = -1 at their real column slots: invisible to
     every read (masking is always against slot_pos) and overwritten by
-    the next real tokens at those positions."""
+    the next real tokens at those positions.
+
+    page_view: (B, n_view) int32 — cache is a paged pool; the gathered
+    view (capacity n_view * page_size) plays the role of the sub-cache
+    and, like the slot path, writes come back as a delta scattered by
+    the caller through the block table."""
     B, T = positions.shape
     k_pos = (positions if token_mask is None
              else jnp.where(token_mask, positions, -1))
-    sub = take_rows(cache, slot_idx)
+    sub = take_rows(cache, slot_idx, page_view)
     new_sub, new_cache = None, None
     if write:
         rows = kv_rows(sub, k_new, v_new, k_pos)
         new_sub = set_rows(sub, rows, positions)
-        new_cache = rows if slot_idx is not None else new_sub
+        deferred = slot_idx is not None or page_view is not None
+        new_cache = rows if deferred else new_sub
     if not write or seg_mask is not None:
         # history (old cache, fully causal) + fresh segment
         mask_s = seg_mask
@@ -363,7 +431,7 @@ def _project_qkv(p, cfg: ModelConfig, x, positions, rope: bool):
 
 def gqa_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
                   seg_mask=None, window=0, block=1024, slot_idx=None,
-                  write=True, token_mask=None):
+                  write=True, token_mask=None, page_view=None):
     """Self-attention for any mode.
 
     x: (B, T, d); positions: (B, T) absolute positions of these tokens.
@@ -380,6 +448,9 @@ def gqa_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
               pre-gathered sub-cache.
     write=False       -> no-commit scoring: returns new_cache=None and
               fresh tokens attend via the segment merge.
+    page_view: (B, n_view) — cache is a paged page pool (DESIGN.md §2.8);
+              reads gather only the mapped pages, writes come back as a
+              delta the caller scatters through the block table.
     Returns (out, new_cache | write-delta | None).
     """
     B, T, _ = x.shape
@@ -401,7 +472,7 @@ def gqa_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
         out, new_cache = _attend_cached(
             qg, k, v, cache, positions, scale=scale, window=window,
             block=block, seg_mask=seg_mask, slot_idx=slot_idx, write=write,
-            par=par, token_mask=token_mask)
+            par=par, token_mask=token_mask, page_view=page_view)
     out = out.reshape(B, T, hq * hd)
     return out @ p["wo"], new_cache
 
@@ -490,7 +561,7 @@ def _rms(x, scale, eps):
 
 def mla_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
                   seg_mask=None, window=0, block=1024, slot_idx=None,
-                  write=True, token_mask=None):
+                  write=True, token_mask=None, page_view=None):
     """Absorbed MLA: the cache holds only (c_kv ++ k_pe) per token; W_UK is
     absorbed into the query and W_UV applied to the attention output. This
     is single-latent-head attention (Hkv=1, G=H). slot_idx/write as in
@@ -527,7 +598,7 @@ def mla_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
         out_lat, new_cache = _attend_cached(
             qg, k_eff, v_eff, cache, positions, scale=scale, window=window,
             block=block, seg_mask=seg_mask, slot_idx=slot_idx, write=write,
-            par=par, token_mask=token_mask)
+            par=par, token_mask=token_mask, page_view=page_view)
     out_lat = out_lat.reshape(B, T, H, m.kv_lora_rank)
     wuv = p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
     out = jnp.einsum("bthr,rhv->bthv", out_lat, wuv).reshape(B, T, H * m.v_head_dim)

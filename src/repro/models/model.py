@@ -257,18 +257,20 @@ def concat_slots(cache, extra):
 
 
 def slot_decode_step(params, cfg: ModelConfig, tokens, cache, slot_idx,
-                     frontend=None):
+                     frontend=None, page_view=None):
     """One decode step resident in the slotted cache. tokens: (B, 1);
     slot_idx: (B,). Writes land in place: only the new token's row of
     each active slot is touched. Rows mapped to the scratch slot are
-    compute padding — their writes land in scratch and are never read."""
+    compute padding — their writes land in scratch and are never read.
+    page_view: block-table view when the pool is paged (DESIGN.md §2.8)."""
     positions = jnp.take(cache["lengths"], slot_idx)[:, None]
     return apply(params, cfg, tokens, positions, cache=cache,
-                 frontend=frontend, write=True, slot_idx=slot_idx)
+                 frontend=frontend, write=True, slot_idx=slot_idx,
+                 page_view=page_view)
 
 
 def slot_extend(params, cfg: ModelConfig, tokens, cache, slot_idx,
-                frontend=None, token_mask=None):
+                frontend=None, token_mask=None, page_view=None):
     """Commit a (B, G) chain of accepted tokens into the slotted cache —
     in place: G rows per active slot, never the full sub-cache. frontend
     (modality embeddings) refreshes cross-attention rows for the active
@@ -285,33 +287,216 @@ def slot_extend(params, cfg: ModelConfig, tokens, cache, slot_idx,
                  + jnp.arange(G, dtype=jnp.int32))
     return apply(params, cfg, tokens, positions, cache=cache,
                  frontend=frontend, write=True, slot_idx=slot_idx,
-                 token_mask=token_mask)
+                 token_mask=token_mask, page_view=page_view)
 
 
 def slot_verify_chunk(params, cfg: ModelConfig, tokens, cache, slot_idx,
-                      rel_pos, seg_mask):
+                      rel_pos, seg_mask, page_view=None):
     """Tree/chain verification against slot-resident caches (no commit).
 
     rel_pos: (B, G) node depths relative to each slot's length — absolute
     positions are resolved on device, so no host read of lengths."""
     positions = jnp.take(cache["lengths"], slot_idx)[:, None] + rel_pos
     logits, _, _ = apply(params, cfg, tokens, positions, cache=cache,
-                         seg_mask=seg_mask, write=False, slot_idx=slot_idx)
+                         seg_mask=seg_mask, write=False, slot_idx=slot_idx,
+                         page_view=page_view)
     return logits
+
+
+# ====================================================== paged caches
+#
+# Paged slot caches (DESIGN.md §2.8): same structure as the slotted
+# cache above except that attention/MLA "self" caches are *page pools*
+# with leading (reps, n_pages, page_size, ...) instead of per-slot
+# reserved rows (reps, pool, capacity, ...). A request owns an ordered
+# list of physical pages (its block table, host-side in the manager);
+# reads/writes go through a (B, n_view) `page_view` built from the block
+# tables. SSM recurrent state, cross-attention caches and `lengths` stay
+# slot-indexed — they are O(1) per request already. All helpers below
+# take `cfg` (static under jit) because paged-ness is per-sublayer: only
+# the layer plan knows which "self" caches are pools.
+
+def _map_subcaches(cfg: ModelConfig, cache, fn):
+    """Rebuild the stages list with fn(spec, subcache_dict) per sublayer."""
+    stages = []
+    for (pattern, _reps), scache in zip(layer_plan(cfg), cache["stages"]):
+        stages.append(tuple(fn(pattern[j], scache[j])
+                            for j in range(len(pattern))))
+    return stages
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16, *,
+                     page_size: int = 64, n_pages: int = 16):
+    """Paged decode cache: attention/MLA KV in page pools, the rest slotted.
+
+    Unlike `init_cache` there is no per-slot max_len — attention capacity
+    is whatever the block tables map, so long contexts are not a special
+    case. `batch` sizes only the slot-indexed leaves (SSM state, cross
+    KV, lengths).
+    """
+    cross_len = cfg.n_frontend_tokens if not cfg.is_encdec else cfg.encoder_seq
+    stages = []
+    for pattern, reps in layer_plan(cfg):
+        per = []
+        for j in range(len(pattern)):
+            spec = pattern[j]
+            hd = cfg.resolved_head_dim
+            c = {}
+            if spec.mixer == "attn":
+                c["self"] = attn.make_paged_kv_cache(
+                    n_pages, page_size, cfg.n_kv_heads, hd, hd, dtype,
+                    quantized=cfg.kv_dtype == "int8")
+            elif spec.mixer == "mla":
+                c["self"] = attn.make_paged_mla_cache(n_pages, page_size,
+                                                      cfg, dtype)
+            else:
+                c["self"] = ssm_mod.make_ssm_state(batch, cfg)
+            if spec.cross:
+                c["cross"] = attn.make_kv_cache(batch, max(cross_len, 1),
+                                                cfg.n_kv_heads, hd, hd, dtype)
+            per.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (reps,) + x.shape).copy(), c))
+        stages.append(tuple(per))
+    return {"stages": stages, "lengths": jnp.zeros((batch,), jnp.int32)}
+
+
+def paged_pool_shape(cfg: ModelConfig, cache):
+    """(n_pages, page_size) of the paged pools, or None if no attention."""
+    for (pattern, _reps), scache in zip(layer_plan(cfg), cache["stages"]):
+        for j, spec in enumerate(pattern):
+            if spec.mixer in ("attn", "mla"):
+                sp = scache[j]["self"]["slot_pos"]
+                return sp.shape[1], sp.shape[2]
+    return None
+
+
+def gather_paged_slots(cfg: ModelConfig, cache, slot_idx, page_view):
+    """Materialize a plain stacked sub-cache from a paged pool (speculative
+    snapshots). The attention views gather only the mapped pages into
+    (reps, B, n_view * ps, ...) — structurally identical to gather_slots'
+    output with capacity C = n_view * ps, so drafting / rollback /
+    extend_snapshot run on it unchanged. Unmapped view entries are NULL
+    pages (slot_pos -1 ⇒ masked)."""
+    B, nv = page_view.shape
+
+    def gather(spec, c):
+        nc = {}
+        for key, sub in c.items():
+            if key == "self" and spec.mixer in ("attn", "mla"):
+                ps = sub["slot_pos"].shape[-1]
+                rows = (page_view[:, :, None] * ps
+                        + jnp.arange(ps, dtype=page_view.dtype)
+                        ).reshape(B, nv * ps)
+                nc[key] = {
+                    f: jnp.take(
+                        v.reshape((v.shape[0], v.shape[1] * v.shape[2])
+                                  + v.shape[3:]),
+                        rows, axis=1)
+                    for f, v in sub.items()}
+            else:
+                nc[key] = jax.tree.map(
+                    lambda v: jnp.take(v, slot_idx, axis=1), sub)
+        return nc
+
+    return {"stages": _map_subcaches(cfg, cache, gather),
+            "lengths": jnp.take(cache["lengths"], slot_idx, axis=0)}
+
+
+def reset_pages(cfg: ModelConfig, cache, page_ids):
+    """Mark physical pages empty (slot_pos = -1) in every paged pool —
+    page free/realloc. K/V payloads are left as garbage; masking is
+    always against slot_pos so they are unreadable."""
+    def reset(spec, c):
+        if spec.mixer not in ("attn", "mla"):
+            return c
+        nc = dict(c)
+        s = dict(c["self"])
+        s["slot_pos"] = s["slot_pos"].at[:, page_ids].set(-1)
+        nc["self"] = s
+        return nc
+
+    return {"stages": _map_subcaches(cfg, cache, reset),
+            "lengths": cache["lengths"]}
+
+
+def reset_slot_state(cfg: ModelConfig, cache, slot_idx):
+    """Reset the slot-indexed leaves of a paged cache on (re-)admission:
+    SSM state/conv/pos zeroed, cross rows emptied, lengths zeroed. The
+    paged pools are untouched — page recycling is `reset_pages`."""
+    def reset(spec, c):
+        nc = dict(c)
+        if spec.mixer == "ssm":
+            nc["self"] = {f: v.at[:, slot_idx].set(0)
+                          for f, v in c["self"].items()}
+        if "cross" in c:
+            cr = dict(c["cross"])
+            cr["slot_pos"] = cr["slot_pos"].at[:, slot_idx].set(-1)
+            nc["cross"] = cr
+        return nc
+
+    return {"stages": _map_subcaches(cfg, cache, reset),
+            "lengths": cache["lengths"].at[slot_idx].set(0)}
+
+
+def concat_slots_paged(cfg: ModelConfig, cache, extra):
+    """Slot-capacity growth for a paged cache: slot-indexed leaves (SSM,
+    cross, lengths) get `extra`'s slots appended; the shared page pools
+    keep `cache`'s arrays (pool growth is `grow_pages`)."""
+    plan = layer_plan(cfg)
+    stages = []
+    for (pattern, _reps), sc, se in zip(plan, cache["stages"],
+                                        extra["stages"]):
+        per = []
+        for j in range(len(pattern)):
+            spec = pattern[j]
+            nc = {}
+            for key in sc[j]:
+                if key == "self" and spec.mixer in ("attn", "mla"):
+                    nc[key] = sc[j][key]
+                else:
+                    nc[key] = jax.tree.map(
+                        lambda a, b: jnp.concatenate([a, b], axis=1),
+                        sc[j][key], se[j][key])
+            per.append(nc)
+        stages.append(tuple(per))
+    lengths = jnp.concatenate([cache["lengths"], extra["lengths"]], axis=0)
+    return {"stages": stages, "lengths": lengths}
+
+
+def grow_pages(cfg: ModelConfig, cache, extra_pages: int):
+    """Append `extra_pages` empty physical pages to every paged pool."""
+    def grow(spec, c):
+        if spec.mixer not in ("attn", "mla"):
+            return c
+        nc = dict(c)
+        s = {}
+        for f, v in c["self"].items():
+            pad = jnp.full((v.shape[0], extra_pages) + v.shape[2:],
+                           -1 if f == "slot_pos" else 0, v.dtype)
+            s[f] = jnp.concatenate([v, pad], axis=1)
+        nc["self"] = s
+        return nc
+
+    return {"stages": _map_subcaches(cfg, cache, grow),
+            "lengths": cache["lengths"]}
 
 
 # ====================================================== apply
 
 def _apply_sublayer(spec: LayerSpec, p, cache, x, positions, cfg: ModelConfig,
                     *, seg_mask, write, kv_src, causal=True, slot_idx=None,
-                    token_mask=None):
+                    token_mask=None, page_view=None):
     """Returns (x, new_cache, aux). With slot_idx, `cache` is a resident
     slot pool (batch axis > B): mixers gather the active rows for reads
     and `new_cache` holds sub-sized *write deltas* (new KV rows / fresh
     recurrent states) instead of updated pool arrays — so the enclosing
     lax.scan stacks only new-token-sized outputs, and `apply` scatters
     the deltas into the donated resident cache once, at the top level of
-    the jitted program."""
+    the jitted program.
+
+    page_view (B, n_view): the attention/MLA "self" caches are paged page
+    pools (DESIGN.md §2.8) — reads gather only the mapped pages; SSM
+    state and cross-attention stay slot-indexed via slot_idx."""
     aux = jnp.zeros((), jnp.float32)
     window = 0 if spec.mixer == "ssm" else effective_window(cfg)
     h = apply_norm(p["ln1"], x, cfg)
@@ -321,14 +506,14 @@ def _apply_sublayer(spec: LayerSpec, p, cache, x, positions, cfg: ModelConfig,
             out, new_self = attn.gqa_attention(
                 p["mixer"], cfg, h, positions, cache=self_cache,
                 seg_mask=seg_mask, window=window, slot_idx=slot_idx,
-                write=write, token_mask=token_mask)
+                write=write, token_mask=token_mask, page_view=page_view)
         else:  # encoder: bidirectional, no rope
             out, new_self = _bidir_attention(p["mixer"], cfg, h)
     elif spec.mixer == "mla":
         out, new_self = attn.mla_attention(
             p["mixer"], cfg, h, positions, cache=self_cache,
             seg_mask=seg_mask, window=window, slot_idx=slot_idx, write=write,
-            token_mask=token_mask)
+            token_mask=token_mask, page_view=page_view)
     else:  # ssm
         out, new_self = ssm_mod.ssm_mixer(p["mixer"], cfg, h,
                                           state=self_cache,
@@ -386,7 +571,8 @@ def _bidir_attention(p, cfg: ModelConfig, h):
     return out.reshape(B, T, hq * hd) @ p["wo"], None
 
 
-def _scatter_stage_delta(scache, deltas, slot_idx, positions):
+def _scatter_stage_delta(scache, deltas, slot_idx, positions,
+                         page_view=None):
     """Scatter one stage's stacked write deltas into the resident pool.
 
     scache: per-sublayer tuple of cache dicts with leading (reps, pool,
@@ -395,7 +581,13 @@ def _scatter_stage_delta(scache, deltas, slot_idx, positions):
     jitted step (outside the scan), so with buffer donation XLA updates
     the pool in place and per-step written bytes scale with the number
     of new tokens. Duplicate scratch rows resolve arbitrarily — scratch
-    contents are never read."""
+    contents are never read.
+
+    page_view (B, n_view): the attention/MLA "self" pools are paged —
+    the write column c = pos % (n_view * ps) is translated through the
+    block table to physical row page_view[b, c // ps] * ps + c % ps.
+    The manager pre-allocates every page a write can touch, so writes
+    never land on the NULL page (padding rows map to the scratch page)."""
     bidx = slot_idx[:, None]
     out = []
     for cj, dj in zip(scache, deltas):
@@ -407,6 +599,21 @@ def _scatter_stage_delta(scache, deltas, slot_idx, positions):
             if "ssm" in d:          # recurrent state: per-slot replacement
                 nc[key] = {f: pool_c[f].at[:, slot_idx].set(d[f])
                            for f in pool_c}
+            elif key != "cross" and page_view is not None:
+                # paged self-attention pool: block-table translated rows
+                ps = pool_c["slot_pos"].shape[-1]
+                n_pages = pool_c["slot_pos"].shape[1]
+                col = positions % (page_view.shape[1] * ps)
+                phys = (jnp.take_along_axis(page_view, col // ps, axis=1) * ps
+                        + col % ps)                              # (B, T)
+                upd = {}
+                for f in pool_c:
+                    rest = pool_c[f].shape[3:]
+                    flat = pool_c[f].reshape(
+                        (pool_c[f].shape[0], n_pages * ps) + rest)
+                    upd[f] = flat.at[:, phys].set(d[f]).reshape(
+                        pool_c[f].shape)
+                nc[key] = upd
             else:                   # attention KV: new-token rows
                 C = pool_c["slot_pos"].shape[-1]
                 if key == "cross":  # full-row projections, columns 0..S
@@ -421,7 +628,7 @@ def _scatter_stage_delta(scache, deltas, slot_idx, positions):
 
 def _apply_stage(pattern, sparams, scache, x, positions, cfg: ModelConfig,
                  *, seg_mask, write, kv_src, causal=True, remat=False,
-                 slot_idx=None, token_mask=None):
+                 slot_idx=None, token_mask=None, page_view=None):
     def body(carry, xs):
         xx = carry
         lp, lc = xs
@@ -432,7 +639,8 @@ def _apply_stage(pattern, sparams, scache, x, positions, cfg: ModelConfig,
             xx, ncj, aux = _apply_sublayer(
                 spec, lp[j], cj, xx, positions, cfg,
                 seg_mask=seg_mask, write=write, kv_src=kv_src, causal=causal,
-                slot_idx=slot_idx, token_mask=token_mask)
+                slot_idx=slot_idx, token_mask=token_mask,
+                page_view=page_view)
             new_lc.append(ncj)
             aux_tot = aux_tot + aux
         return xx, (tuple(new_lc), aux_tot)
@@ -468,7 +676,8 @@ def _logits(params, cfg: ModelConfig, x):
 
 def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
           frontend=None, seg_mask=None, write=True, remat=False,
-          return_hidden=False, slot_idx=None, token_mask=None):
+          return_hidden=False, slot_idx=None, token_mask=None,
+          page_view=None):
     """Unified forward.
 
     tokens:    (B, T) int32
@@ -491,6 +700,12 @@ def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
                tokens at those positions overwrite them); the SSM mixer
                freezes its state/conv across them; `lengths` advances by
                the real-token count only.
+    page_view: (B, n_view) int32 — the slot pool's attention/MLA "self"
+               caches are *paged* (init_paged_cache, DESIGN.md §2.8):
+               entry [b, i] is the physical page holding request b's
+               logical page i (NULL for unmapped tail entries). Reads
+               gather only the view's pages; write deltas scatter
+               through the block table. Requires slot_idx.
     Returns (logits (B,T,Vp) f32, new_cache, aux_loss) [+ hidden if asked].
     """
     B, T = tokens.shape
@@ -498,6 +713,8 @@ def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
         positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
     if token_mask is not None:
         assert slot_idx is not None, "token_mask requires the slot path"
+    if page_view is not None:
+        assert slot_idx is not None, "page_view requires the slot path"
     dtype = jnp.dtype(cfg.dtype)
     x = params["embed"][tokens].astype(dtype)
     if cfg.pos_embed == "learned":
@@ -519,12 +736,12 @@ def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
         x, ncache, aux = _apply_stage(
             pattern, sparams, scache, x, positions, cfg,
             seg_mask=seg_mask, write=write, kv_src=kv_src, remat=remat,
-            slot_idx=slot_idx, token_mask=token_mask)
+            slot_idx=slot_idx, token_mask=token_mask, page_view=page_view)
         if slot_idx is not None and cache is not None:
             # resident path: the scan produced write deltas; scatter them
             # into the pool here (top level, donated buffers)
             ncache = (_scatter_stage_delta(scache, ncache, slot_idx,
-                                           positions)
+                                           positions, page_view)
                       if write else scache)
         new_stages.append(ncache)
         aux_total = aux_total + aux

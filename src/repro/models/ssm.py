@@ -5,6 +5,14 @@ Full-sequence path uses the chunked SSD algorithm (intra-chunk dual
 is the O(1) recurrent state update. `ssd_reference` (naive recurrence over
 time) is the oracle for tests, and `repro.kernels.ssd_scan` is the Pallas
 TPU kernel for the intra-chunk compute.
+
+Paged serving note (DESIGN.md §2.8): SSM state does NOT page. The
+recurrent state (`ssm_state`) and conv tail (`conv_state`) are O(1) per
+request — a fixed (d_state x head) block regardless of sequence length —
+so there is nothing to page: the paged cache keeps them slot-indexed
+exactly like the resident layout, and only attention/MLA KV (which grows
+with the sequence) moves into the page pool. Hybrid models therefore mix
+both regimes in one cache pytree.
 """
 from __future__ import annotations
 

@@ -289,6 +289,9 @@ class WallClockExecutor:
 
     # ------------------------------------------------------------ one step
     def step(self):
+        """One wall-clock serving iteration: draft (or reuse the
+        draft-ahead job), dispatch verification, walk acceptance,
+        commit, and spawn the next draft-ahead job."""
         eng = self.eng
         job, self.next_job = self.next_job, None
         if job is None:

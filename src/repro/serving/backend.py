@@ -62,12 +62,14 @@ class VerifyHandle:
         self._span = span
 
     def result(self) -> np.ndarray:
+        """Materialize (blocking) and cache the verification logits."""
         if self._value is None:
             raw = self._future.result()
             self._value = self._convert(raw) if self._convert else raw
         return self._value
 
     def times(self) -> Optional[Tuple[float, float]]:
+        """Measured wall (t0, t1) of the forward, or None if simulated."""
         if self._span is None:
             return None
         return self._span["t0"], self._span["t1"]
@@ -87,10 +89,13 @@ class ExecutionBackend(ABC):
     #: flight concurrently (selects the WallClockExecutor)
     is_wallclock = False
 
-    def __init__(self, target, drafter_specs, max_len: int):
+    def __init__(self, target, drafter_specs, max_len: int,
+                 paged: bool = False, page_size: int = 64,
+                 pool_pages: int = 0):
         tcfg, tparams = target
-        self.target = ModelRunner(tcfg, tparams, max_len)
-        self.drafters = [ModelRunner(c, p, max_len)
+        kw = dict(paged=paged, page_size=page_size, pool_pages=pool_pages)
+        self.target = ModelRunner(tcfg, tparams, max_len, **kw)
+        self.drafters = [ModelRunner(c, p, max_len, **kw)
                          for c, p, _ in drafter_specs]
         self._engine = None
 
@@ -174,15 +179,18 @@ class SimulatedBackend(ExecutionBackend):
     exactly the call the pre-split engine made, in the same order."""
 
     def now_ms(self) -> float:
+        """Simulated engine clock (ms)."""
         return self._engine.clock_ms if self._engine is not None else 0.0
 
     def prefill_target(self, reqs, batched=False):
+        """Prefill the target for {rid: ctx}, optionally as one burst."""
         if batched and len(reqs) > 1:
             return self.target.prefill_requests(reqs)
         return {rid: self.target.prefill_request(rid, ctx)
                 for rid, ctx in reqs.items()}
 
     def prefill_drafters(self, reqs, batched=False):
+        """Prefill every drafter; returns {rid: [mean logprob per drafter]}."""
         out: Dict[int, List[float]] = {rid: [] for rid in reqs}
         if batched and len(reqs) > 1:
             for d in self.drafters:
@@ -197,26 +205,33 @@ class SimulatedBackend(ExecutionBackend):
         return out
 
     def verify_dispatch(self, rids, tokens, rel_pos, seg_mask):
+        """Run tree verification synchronously; handle is pre-resolved."""
         return VerifyHandle(
             value=self.target.verify(rids, tokens, rel_pos, seg_mask))
 
     def commit_target(self, committed):
+        """Commit accepted tokens into the target cache; returns tails."""
         return self.target.extend_committed(committed)
 
     def commit_drafters(self, committed):
+        """Commit accepted tokens into every drafter cache."""
         for d in self.drafters:
             d.extend_committed(committed)
 
     def draft_snapshot(self, di, rids):
+        """Rollback-safe speculative cache copy from drafter `di`."""
         return self.drafters[di].speculative_caches(rids)
 
     def draft_extend(self, di, snap, tokens):
+        """Teacher-force `tokens` into a drafter snapshot."""
         return self.drafters[di].extend_snapshot(snap, tokens)[1]
 
     def draft_decode(self, di, rids, tokens, snap):
+        """One greedy decode step on a drafter snapshot."""
         return self.drafters[di].decode(rids, tokens, caches=snap)
 
     def drop_request(self, rid):
+        """Evict `rid` from the target and every drafter cache."""
         self.target.drop(rid)
         for d in self.drafters:
             d.drop(rid)
@@ -236,8 +251,12 @@ class AsyncJaxBackend(ExecutionBackend):
 
     is_wallclock = True
 
-    def __init__(self, target, drafter_specs, max_len: int):
-        super().__init__(target, drafter_specs, max_len)
+    def __init__(self, target, drafter_specs, max_len: int,
+                 paged: bool = False, page_size: int = 64,
+                 pool_pages: int = 0):
+        super().__init__(target, drafter_specs, max_len,
+                         paged=paged, page_size=page_size,
+                         pool_pages=pool_pages)
         self._t0 = time.monotonic()
         self._pool = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="verify-server")
@@ -245,6 +264,7 @@ class AsyncJaxBackend(ExecutionBackend):
         self._timeline_pos = 0
 
     def now_ms(self) -> float:
+        """Wall-clock ms since backend construction."""
         return (time.monotonic() - self._t0) * 1e3
 
     # ---------------------------------------------------- target worker
@@ -253,7 +273,7 @@ class AsyncJaxBackend(ExecutionBackend):
         span) where span's t0/t1 are filled in by the worker."""
         span = {"kind": kind, "t0": 0.0, "t1": 0.0}
 
-        def task():
+        def _task():
             span["t0"] = self.now_ms()
             try:
                 return fn()
@@ -261,7 +281,7 @@ class AsyncJaxBackend(ExecutionBackend):
                 span["t1"] = self.now_ms()
                 self.timeline.append(span)
 
-        return self._pool.submit(task), span
+        return self._pool.submit(_task), span
 
     def drain_timeline(self) -> List[dict]:
         """Completed target-task spans since the last drain (the list is
@@ -273,6 +293,7 @@ class AsyncJaxBackend(ExecutionBackend):
 
     # ----------------------------------------------------- target ops
     def prefill_target(self, reqs, batched=True):
+        """Blocking burst prefill (see `prefill_target_async`)."""
         return self.prefill_target_async(reqs).result()
 
     def prefill_target_async(self, reqs) -> Future:
@@ -285,20 +306,22 @@ class AsyncJaxBackend(ExecutionBackend):
         return fut
 
     def verify_dispatch(self, rids, tokens, rel_pos, seg_mask):
+        """Queue tree verification on the server thread; lazy handle."""
         B = len(rids)
         vocab = self.target.cfg.vocab
 
-        def fwd():
+        def _fwd():
             lg = self.target.verify_device(rids, tokens, rel_pos, seg_mask)
             lg.block_until_ready()   # compute timed here; transfer deferred
             return lg
 
-        fut, span = self.submit_target("verify", fwd)
+        fut, span = self.submit_target("verify", _fwd)
         return VerifyHandle(
             future=fut, span=span,
             convert=lambda lg: np.asarray(lg[:B, :, :vocab]))
 
     def commit_target(self, committed):
+        """Blocking cache commit (see `commit_target_async`)."""
         return self.commit_target_async(committed).result()
 
     def commit_target_async(self, committed) -> Future:
@@ -315,6 +338,7 @@ class AsyncJaxBackend(ExecutionBackend):
         return fut
 
     def drop_request(self, rid):
+        """Evict `rid`; the target-side release is queued FIFO."""
         # target slot release must serialize behind any queued prefill
         # that may still admit this rid (shed-after-queued-prefill)
         self.submit_target("drop", lambda: self.target.drop(rid))
@@ -323,6 +347,8 @@ class AsyncJaxBackend(ExecutionBackend):
 
     # ---------------------------------------------------- drafter ops
     def prefill_drafters(self, reqs, batched=True):
+        """Prefill every drafter on the engine thread (drafters are
+        engine-thread-owned; only target ops route to the server)."""
         out: Dict[int, List[float]] = {rid: [] for rid in reqs}
         for d in self.drafters:
             res = d.prefill_requests(reqs) if (batched and len(reqs) > 1) \
@@ -333,30 +359,39 @@ class AsyncJaxBackend(ExecutionBackend):
         return out
 
     def draft_snapshot(self, di, rids):
+        """Rollback-safe speculative cache copy from drafter `di`."""
         return self.drafters[di].speculative_caches(rids)
 
     def draft_extend(self, di, snap, tokens):
+        """Teacher-force `tokens` into a drafter snapshot."""
         return self.drafters[di].extend_snapshot(snap, tokens)[1]
 
     def draft_decode(self, di, rids, tokens, snap):
+        """One greedy decode step on a drafter snapshot."""
         return self.drafters[di].decode(rids, tokens, caches=snap)
 
     def commit_drafters(self, committed):
+        """Commit accepted tokens into every drafter cache."""
         for d in self.drafters:
             d.extend_committed(committed)
 
     def shutdown(self):
+        """Drain and join the verification server thread."""
         self._pool.shutdown(wait=True)
 
 
-def make_backend(spec, target, drafter_specs, max_len: int
-                 ) -> ExecutionBackend:
+def make_backend(spec, target, drafter_specs, max_len: int,
+                 paged: bool = False, page_size: int = 64,
+                 pool_pages: int = 0) -> ExecutionBackend:
     """Resolve a backend spec: None/"sim" -> SimulatedBackend, "async" ->
-    AsyncJaxBackend, or a ready ExecutionBackend instance."""
+    AsyncJaxBackend, or a ready ExecutionBackend instance. `paged` (from
+    `CoSineConfig.paged_pool`) selects the paged KV pool in every runner
+    the backend constructs (DESIGN.md §2.8)."""
     if isinstance(spec, ExecutionBackend):
         return spec
+    kw = dict(paged=paged, page_size=page_size, pool_pages=pool_pages)
     if spec in (None, "sim"):
-        return SimulatedBackend(target, drafter_specs, max_len)
+        return SimulatedBackend(target, drafter_specs, max_len, **kw)
     if spec == "async":
-        return AsyncJaxBackend(target, drafter_specs, max_len)
+        return AsyncJaxBackend(target, drafter_specs, max_len, **kw)
     raise ValueError(f"unknown backend {spec!r} (expected 'sim' or 'async')")

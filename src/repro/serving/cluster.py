@@ -101,9 +101,11 @@ class CohortSchedule:
     committed: bool = False
 
     def roles(self) -> Dict[int, str]:
+        """{node: role} for this cohort's dispatched drafts."""
         return {d.node: d.role for d in self.drafts}
 
     def node_busy(self) -> Dict[int, float]:
+        """{node: busy ms} this cohort charged to each node."""
         return {d.node: d.busy_ms for d in self.drafts}
 
 

@@ -68,6 +68,9 @@ PIPELINED_STRATEGIES = ("pipeinfer", "cosine")
 
 @dataclass
 class IterationRecord:
+    """Accounting for one serving iteration (one cohort through
+    draft -> verify -> commit)."""
+
     t_start_ms: float
     t_iter_ms: float
     batch: int
@@ -126,6 +129,7 @@ class ServeStats:
         m.observe("serve.batch_size", rec.batch)
 
     def note_draft_work(self, node: int, n_nodes: int, n_tokens: int):
+        """Charge `n_tokens` drafter token-decodes to `node`."""
         g = self.metrics.gauge("draft.n_nodes")
         if g.value < n_nodes:
             g.set(n_nodes)
@@ -133,17 +137,21 @@ class ServeStats:
         self.metrics.inc("draft.calls", n_tokens)
 
     def note_shed(self):
+        """Count one admission rejection."""
         self.metrics.inc("admission.shed")
 
     def note_preempt(self):
+        """Count one priority preemption (slot eviction)."""
         self.metrics.inc("admission.preempted")
 
     @property
     def total_committed(self) -> int:
+        """Tokens committed across all requests."""
         return int(self.metrics.value("serve.committed_tokens"))
 
     @property
     def total_drafted(self) -> int:
+        """Draft tokens proposed across all cohorts."""
         return int(self.metrics.value("serve.drafted_tokens"))
 
     # --- admission-control outcomes (DESIGN.md §2.5) ---
@@ -175,15 +183,18 @@ class ServeStats:
 
     @property
     def sim_ms(self) -> float:
+        """Simulated end time of the last iteration (ms)."""
         return (self.records[-1].t_start_ms + self.records[-1].t_iter_ms
                 if self.records else 0.0)
 
     @property
     def throughput_tps(self) -> float:
+        """Committed tokens per simulated second."""
         return self.total_committed / max(self.sim_ms / 1000.0, 1e-9)
 
     @property
     def mean_acceptance(self) -> float:
+        """Mean committed tokens per iteration."""
         return self.total_committed / max(len(self.records), 1)
 
     # --- pipeline health (DESIGN.md §2.2) ---
@@ -195,6 +206,7 @@ class ServeStats:
 
     @property
     def prefill_busy_ms(self) -> float:
+        """Prefill share of the verification server's busy time."""
         return self.metrics.value("verify.prefill_ms")
 
     @property
@@ -204,11 +216,13 @@ class ServeStats:
 
     @property
     def verifier_utilization(self) -> float:
+        """busy / (busy + idle) of the verification server."""
         busy, idle = self.verifier_busy_ms, self.verifier_idle_ms
         return busy / max(busy + idle, 1e-9)
 
     @property
     def n_invalidated(self) -> int:
+        """Draft-ahead cohorts invalidated by acceptance divergence."""
         return sum(r.n_invalidated for r in self.records)
 
     # --- drafter cluster health (DESIGN.md §2.4) ---
@@ -224,10 +238,12 @@ class ServeStats:
 
     @property
     def n_straggler_side(self) -> int:
+        """Late drafter proposals demoted to side branches."""
         return sum(r.n_straggler_side for r in self.records)
 
     @property
     def n_straggler_dropped(self) -> int:
+        """Late drafter proposals dropped outright."""
         return sum(r.n_straggler_dropped for r in self.records)
 
 
@@ -257,6 +273,13 @@ class DraftEntry:
 
 
 class SpeculativeEngine:
+    """The serving engine: admission, routing, drafting cohorts,
+    tree verification, acceptance and commit over an execution
+    backend (policy here, mechanism in `serving.backend` —
+    DESIGN.md §2.7). `strategy` picks the serving flow (`STRATEGIES`):
+    plain AR, SpecInfer fan-out, PipeInfer, or CoSine's routed
+    collaborative drafting."""
+
     def __init__(self, target: Tuple[ModelConfig, dict],
                  drafters: Sequence[Tuple[ModelConfig, dict, str]],
                  cosine: CoSineConfig, strategy: str = "cosine",
@@ -279,7 +302,9 @@ class SpeculativeEngine:
         # calibration and tests; the serving path goes through
         # `self.backend` only.
         self.backend: ExecutionBackend = make_backend(
-            backend, target, drafters, max_len)
+            backend, target, drafters, max_len,
+            paged=cosine.paged_pool, page_size=cosine.page_size,
+            pool_pages=cosine.pool_pages)
         self.backend.bind(self)
         self.target = self.backend.target
         self.drafters = self.backend.drafters
@@ -522,6 +547,7 @@ class SpeculativeEngine:
         return max(counts.values(), default=b)
 
     def n_active(self, entries: List[DraftEntry]) -> int:
+        """Drafters concurrently active per request under `strategy`."""
         if self.strategy == "cosine":
             mean = sum(len(e.parts) for e in entries) / max(len(entries), 1)
             return max(int(np.ceil(mean)), 1)
@@ -844,6 +870,8 @@ class SpeculativeEngine:
 
     # ------------------------------------------------------------ one step
     def step(self) -> Optional[IterationRecord]:
+        """One serving iteration (delegates to the pipelined executor
+        when the strategy decouples draft/verify); None when drained."""
         if self.executor is not None:
             return self.executor.step()
 
@@ -1012,6 +1040,7 @@ class SpeculativeEngine:
                 self.on_commit(r, toks, self.clock_ms)
 
     def run(self, max_iterations: int = 10_000) -> ServeStats:
+        """Step until the pool drains; returns the run's ServeStats."""
         for _ in range(max_iterations):
             if self.step() is None:
                 break

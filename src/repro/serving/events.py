@@ -57,6 +57,9 @@ class Event:
 
 
 class EventLog:
+    """Bounded, totally-ordered serving event log (the `seq` counter
+    breaks ties at equal simulated times — DESIGN.md §2.2)."""
+
     def __init__(self, max_events: int = 0):
         self.max_events = int(max_events)
         self.events: Deque[Event] = deque(
@@ -66,6 +69,7 @@ class EventLog:
 
     def emit(self, t_ms: float, stage: str, kind: str,
              rids: Tuple[int, ...] = (), info: str = "") -> Event:
+        """Append one event (drops the oldest past `max_events`)."""
         if self.max_events > 0 and len(self.events) == self.max_events:
             self.n_dropped += 1
         ev = Event(float(t_ms), next(self._seq), stage, kind,
@@ -74,6 +78,7 @@ class EventLog:
         return ev
 
     def trace(self):
+        """Deterministic comparison key list for the retained events."""
         return [ev.key() for ev in self.events]
 
 

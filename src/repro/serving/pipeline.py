@@ -338,6 +338,10 @@ class PipelineExecutor:
 
     # ------------------------------------------------------------ one step
     def step(self):
+        """One discrete-event serving iteration on the simulated
+        clocks: consume or spawn the draft job, schedule verification
+        on the verify StageClock, walk acceptance, commit, and leave
+        the next draft-ahead job pending."""
         eng = self.eng
         job, self.next_job = self.next_job, None
         if job is None:

@@ -20,6 +20,13 @@ Speculative rollback is snapshot-based: drafting gathers a compact
 sub-cache once (`speculative_caches`, a device-side copy) and decodes on
 it without ever scattering back — discarding the snapshot IS the
 rollback (correct for both attention KV and SSM recurrent state).
+
+Paged mode (`ModelRunner(..., paged=True)`, DESIGN.md §2.8): the
+attention/MLA KV lives in a fixed page pool instead of reserved
+per-slot rows. `PagedSlotCacheManager` keeps a host-side block table
+per request and hands every step a `page_view` — admission, eviction
+and rollback become block-table operations, memory scales with tokens
+actually held, and long prompts are not bounded by `max_len`.
 """
 from __future__ import annotations
 
@@ -33,15 +40,39 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.models import model as M
 
-# prefill chunk shapes: an arbitrary-length prompt streams through
-# `slot_extend` as full PREFILL_CHUNK-sized writes plus ONE final chunk
-# padded up to the next bucket with the pad masked out (token_mask), so
-# a 7-token prompt is a single masked 8-wide write instead of a 4+2+1
-# bucket decomposition — compile shapes stay bounded and the number of
-# forwards is ceil(P / PREFILL_CHUNK)
+# ---------------------------------------------------------------------
+# Shape-bucket constants — the single source of truth (tests import
+# these; do not duplicate the values elsewhere).
+#
+# Rationale: every distinct (batch rows, token width) pair that reaches
+# a jitted step function costs one XLA compile. Both axes are therefore
+# snapped to power-of-two buckets: compiles are O(log) in the largest
+# shape seen, and the pad rows/columns are masked out (scratch slot /
+# token_mask) so bucketing never changes results.
+#
+# PREFILL_BUCKETS / PREFILL_CHUNK (token-width axis): an arbitrary-length
+# prompt streams through `slot_extend` as full PREFILL_CHUNK-sized
+# writes plus ONE final chunk padded up to the next bucket with the pad
+# masked out (token_mask), so a 7-token prompt is a single masked 8-wide
+# write instead of a 4+2+1 bucket decomposition — compile shapes stay
+# bounded and the number of forwards is ceil(P / PREFILL_CHUNK).
+# Sliding-window configs chunk at RING_MARGIN instead — see
+# `prefill_chunk_len` for why a scatter may not span more ring columns.
+#
+# SLOT_BUCKETS (batch-rows axis): active-batch sizes are snapped up via
+# `slot_bucket`; the enumeration just bounds the table — past its last
+# entry the clamp continues with the next power of two (one compile per
+# doubling, never one per batch size).
 PREFILL_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
 PREFILL_CHUNK = 512
 SLOT_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+
+# Speculative snapshots gathered from a paged pool reserve this much
+# column slack past each request's length so draft-ahead writes (gamma
+# plus assumed-extension chains) never wrap a full-attention snapshot.
+# RING_MARGIN-sized for the same reason the ring margin exists: it is
+# the largest segment one step may write.
+SNAP_SLACK = 128
 
 
 def prefill_bucket(n: int) -> int:
@@ -88,6 +119,11 @@ _g_slot_extend = jax.jit(M.slot_extend, static_argnames=("cfg",),
 _g_slot_verify = jax.jit(M.slot_verify_chunk, static_argnames=("cfg",))
 _g_gather = jax.jit(M.gather_slots)
 _g_scatter = jax.jit(M.scatter_slots, donate_argnames=("cache",))
+_g_gather_paged = jax.jit(M.gather_paged_slots, static_argnames=("cfg",))
+_g_reset_slot = jax.jit(M.reset_slot_state, static_argnames=("cfg",),
+                        donate_argnames=("cache",))
+_g_reset_pages = jax.jit(M.reset_pages, static_argnames=("cfg",),
+                         donate_argnames=("cache",))
 
 
 class SlotCacheManager:
@@ -117,6 +153,7 @@ class SlotCacheManager:
 
     # -------------------------------------------------------------- admission
     def admit(self, rid: int) -> int:
+        """Assign (or return) `rid`'s slot, growing the pool if full."""
         if rid in self.slot_of:
             return self.slot_of[rid]
         if not self._free:
@@ -131,6 +168,7 @@ class SlotCacheManager:
         return slot
 
     def release(self, rid: int):
+        """Free `rid`'s slot and drop stale memoized batch indices."""
         slot = self.slot_of.pop(rid, None)
         if slot is not None:
             self._free.append(slot)
@@ -165,17 +203,249 @@ class SlotCacheManager:
         return idx
 
     def length(self, rid: int) -> int:
+        """Committed tokens in `rid`'s slot (device-authoritative)."""
         return int(self.cache["lengths"][self.slot_of[rid]])
+
+    # ------------------------------------------------------------ paged hooks
+    # The resident pool reserves full capacity per slot, so the paged
+    # protocol (allocate-before-write, block-table views) is a no-op
+    # here; ModelRunner calls these unconditionally and passes the
+    # returned page_view (None) straight through to the step functions.
+    def prepare(self, rids: Sequence[int], write: int,
+                read_extra: int = 0) -> Optional[jnp.ndarray]:
+        """Allocate pages for the next `write` columns of each rid and
+        return the batch page_view (None on the resident pool)."""
+        return None
+
+    def advance(self, rid: int, n: int):
+        """Advance the host-side length mirror after a committed write
+        of `n` real tokens (paged bookkeeping; no-op here)."""
+
+    def snapshot_view(self, rids: Sequence[int]) -> Optional[jnp.ndarray]:
+        """Read-only page_view for a speculative snapshot gather (None
+        on the resident pool)."""
+        return None
+
+
+class PagedSlotCacheManager(SlotCacheManager):
+    """Slot manager over a paged KV pool (DESIGN.md §2.8).
+
+    Attention/MLA KV lives in one fixed pool of `page_size`-token pages
+    per sub-layer; each request owns an ordered host-side *block table*
+    mapping its logical pages to physical ones. SSM state, cross-attn
+    KV and `lengths` stay slot-indexed (they are O(1) per request).
+
+    Protocol: every write site calls `prepare(rids, write=W)` first —
+    it allocates any page the next W columns touch and returns the
+    bucketed (rows, n_view) page_view — and `advance(rid, n_real)`
+    after the write commits. Eviction (`release`) returns the pages to
+    the free list and wipes their slot_pos in one batched reset, so
+    recycled pages are invisible until rewritten; admission resets only
+    the slot-indexed leaves. Rollback needs nothing at all: speculative
+    snapshots are gathered *copies* (`gather_paged_slots`), so dropping
+    a snapshot can never leak or alias pages.
+
+    Physical pages 0 and 1 are reserved: 0 is SCRATCH (write target for
+    padded batch rows — garbage, never read) and 1 is NULL (read filler
+    for unmapped view entries — slot_pos stays -1 forever, never
+    written, so it masks like any empty slot).
+
+    Windowed (SWA) layers keep their ring semantics: the block table is
+    a fixed ring of C/page_size entries (C = window + RING_MARGIN,
+    page_size fitted to divide C) allocated on first touch, and the
+    view is always the whole ring — write columns pos % C land on the
+    same pages as the resident ring, bit-for-bit.
+    """
+
+    SCRATCH_PAGE = 0
+    NULL_PAGE = 1
+    _RESERVED = 2
+
+    def __init__(self, cfg: ModelConfig, max_len: int, n_slots: int = 8,
+                 dtype=jnp.float32, page_size: int = 64,
+                 pool_pages: int = 0):
+        from repro.models.attention import cache_capacity
+        self.cfg = cfg
+        self.max_len = max_len
+        self.dtype = dtype
+        self.n_slots = n_slots
+        win = M.effective_window(cfg)
+        ps = max(1, page_size)
+        if win:
+            cap = cache_capacity(cfg, max_len, win)
+            while cap % ps:        # ring capacity must be whole pages
+                ps //= 2
+            self.ring_pages = cap // ps
+        else:
+            self.ring_pages = 0
+        self.page_size = ps
+        n_pages = pool_pages or (self._RESERVED + 4 * n_slots)
+        n_pages = max(n_pages, self._RESERVED + 1)
+        self.n_pages = n_pages
+        self.cache = M.init_paged_cache(cfg, n_slots + 1, dtype=dtype,
+                                        page_size=ps, n_pages=n_pages)
+        self._free = list(range(n_slots, 0, -1))      # pop() -> slot 1 first
+        self._free_pages = list(range(n_pages - 1, self._RESERVED - 1, -1))
+        self.slot_of: Dict[int, int] = {}
+        self._idx_cache: Dict[tuple, jnp.ndarray] = {}
+        self.tables: Dict[int, List[int]] = {}
+        self.host_len: Dict[int, int] = {}
+
+    # -------------------------------------------------------------- admission
+    def admit(self, rid: int) -> int:
+        """Assign a slot + empty block table; resets only the
+        slot-indexed leaves (pages are mapped lazily by `prepare`)."""
+        if rid in self.slot_of:
+            return self.slot_of[rid]
+        if not self._free:
+            self._grow()
+        slot = self._free.pop()
+        self.slot_of[rid] = slot
+        self.tables[rid] = [-1] * self.ring_pages if self.ring_pages else []
+        self.host_len[rid] = 0
+        self.cache = _g_reset_slot(cfg=self.cfg, cache=self.cache,
+                                   slot_idx=jnp.asarray([slot], jnp.int32))
+        return slot
+
+    def release(self, rid: int):
+        """Free the slot, wipe the mapped pages' slot_pos in one
+        batched reset, and return them to the free list."""
+        pids = [p for p in self.tables.pop(rid, []) if p >= 0]
+        self.host_len.pop(rid, None)
+        super().release(rid)
+        if pids:
+            # one batched slot_pos wipe; pad to a power-of-two count with
+            # the NULL page (already -1, so the pad is a no-op)
+            n = 1 << (len(pids) - 1).bit_length()
+            padded = pids + [self.NULL_PAGE] * (n - len(pids))
+            self.cache = _g_reset_pages(
+                cfg=self.cfg, cache=self.cache,
+                page_ids=jnp.asarray(padded, jnp.int32))
+            self._free_pages.extend(reversed(pids))
+
+    def _grow(self):
+        extra = M.init_paged_cache(self.cfg, self.n_slots, dtype=self.dtype,
+                                   page_size=self.page_size, n_pages=2)
+        self.cache = M.concat_slots_paged(self.cfg, self.cache, extra)
+        self._free.extend(range(2 * self.n_slots, self.n_slots, -1))
+        self.n_slots *= 2
+
+    def _grow_pages(self):
+        extra = self.n_pages                      # double the pool
+        self.cache = M.grow_pages(self.cfg, self.cache, extra)
+        self._free_pages = (list(range(self.n_pages + extra - 1,
+                                       self.n_pages - 1, -1))
+                            + self._free_pages)
+        self.n_pages += extra
+
+    def _alloc_page(self) -> int:
+        if not self._free_pages:
+            self._grow_pages()
+        return self._free_pages.pop()
+
+    # -------------------------------------------------------------- paging
+    def ensure(self, rid: int, upto: int):
+        """Map every page that columns [host_len, upto) touch. Full
+        attention grows the table; windowed maps ring entries on first
+        touch. Called by `prepare` before any write."""
+        tbl = self.tables[rid]
+        hl = self.host_len[rid]
+        ps = self.page_size
+        if upto <= hl:
+            return
+        if self.ring_pages:
+            for lp in range(hl // ps, (upto - 1) // ps + 1):
+                r = lp % self.ring_pages
+                if tbl[r] < 0:
+                    tbl[r] = self._alloc_page()
+        else:
+            need = (upto + ps - 1) // ps
+            while len(tbl) < need:
+                tbl.append(self._alloc_page())
+
+    def view(self, rids: Sequence[int], extra: int = 0) -> jnp.ndarray:
+        """Bucketed (rows, n_view) block-table view for a batch.
+
+        n_view covers each rid's held tokens plus `extra` columns,
+        snapped to a power of two (windowed: always the whole ring).
+        Unmapped entries -> NULL page; padded batch rows -> SCRATCH."""
+        rows = slot_bucket(max(len(rids), 1))
+        ps = self.page_size
+        if self.ring_pages:
+            nv = self.ring_pages
+        else:
+            need = 1
+            for r in rids:
+                need = max(need, -(-(self.host_len[r] + extra) // ps))
+            nv = 1 << (need - 1).bit_length()
+        out = np.full((rows, nv), self.NULL_PAGE, np.int32)
+        for j, r in enumerate(rids):
+            for i, p in enumerate(self.tables[r][:nv]):
+                if p >= 0:
+                    out[j, i] = p
+        out[len(rids):, :] = self.SCRATCH_PAGE
+        return jnp.asarray(out)
+
+    def prepare(self, rids: Sequence[int], write: int,
+                read_extra: int = 0) -> jnp.ndarray:
+        """Allocate pages for the next `write` columns of each rid and
+        return the page_view covering held + write + read_extra."""
+        if write:
+            for r in rids:
+                self.ensure(r, self.host_len[r] + write)
+        return self.view(rids, extra=write + read_extra)
+
+    def advance(self, rid: int, n: int):
+        """Record `n` committed tokens (host paging mirror)."""
+        self.host_len[rid] += n
+
+    def snapshot_view(self, rids: Sequence[int]) -> jnp.ndarray:
+        """View for a snapshot gather with SNAP_SLACK columns of slack so
+        draft-ahead writes on the (copied) snapshot never wrap."""
+        return self.view(rids, extra=SNAP_SLACK)
+
+    # -------------------------------------------------------------- accounting
+    def pages_held(self) -> int:
+        """Physical pages currently mapped by live requests."""
+        return sum(sum(1 for p in t if p >= 0) for t in self.tables.values())
+
+    def fragmentation(self) -> float:
+        """Fraction of held page capacity that is not live tokens —
+        internal fragmentation of the tail pages (0.0 = perfectly full)."""
+        held = self.pages_held() * self.page_size
+        if not held:
+            return 0.0
+        live = sum(min(self.host_len[r], self.ring_pages * self.page_size
+                       if self.ring_pages else self.host_len[r])
+                   for r in self.tables)
+        return 1.0 - live / held
 
 
 class ModelRunner:
+    """Executes one model over its slot cache with jitted, bucketed steps.
+
+    paged=True swaps the reserved-capacity `SlotCacheManager` for the
+    `PagedSlotCacheManager` (page-pool KV, block tables — DESIGN.md
+    §2.8); every step then threads the manager's `page_view` into the
+    model's read/write path. The two modes produce identical committed
+    tokens — the paged path is gated behind `CoSineConfig.paged_pool`.
+    """
+
     def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
-                 cache_dtype=jnp.float32, n_slots: int = 8):
+                 cache_dtype=jnp.float32, n_slots: int = 8,
+                 paged: bool = False, page_size: int = 64,
+                 pool_pages: int = 0):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.cache_dtype = cache_dtype
-        self.slots = SlotCacheManager(cfg, max_len, n_slots, cache_dtype)
+        self.paged = paged
+        if paged:
+            self.slots: SlotCacheManager = PagedSlotCacheManager(
+                cfg, max_len, n_slots, cache_dtype,
+                page_size=page_size, pool_pages=pool_pages)
+        else:
+            self.slots = SlotCacheManager(cfg, max_len, n_slots, cache_dtype)
         self.embed_np = np.asarray(params["embed"][: cfg.vocab], np.float32)
         # masked slot_extend writes issued by the prefill paths (the
         # burst-admission test asserts batched prefill issues fewer)
@@ -186,6 +456,7 @@ class ModelRunner:
         self._jit_slot_decode = partial(_g_slot_decode, cfg=cfg)
         self._jit_slot_extend = partial(_g_slot_extend, cfg=cfg)
         self._jit_slot_verify = partial(_g_slot_verify, cfg=cfg)
+        self._jit_gather_paged = partial(_g_gather_paged, cfg=cfg)
 
     # ----------------------------------------------------------- lifecycle
     def prefill_request(self, rid: int, tokens: np.ndarray):
@@ -221,10 +492,12 @@ class ModelRunner:
             seg[0, :n_real] = toks[i: i + n_real]
             mask = np.zeros((rows, width), bool)
             mask[0, :n_real] = True            # batch-pad rows stay masked
+            pv = self.slots.prepare([rid], write=width)
             logits, self.slots.cache, _ = self._jit_slot_extend(
                 self.params, tokens=jnp.asarray(seg), cache=self.slots.cache,
-                slot_idx=sidx, token_mask=jnp.asarray(mask))
+                slot_idx=sidx, token_mask=jnp.asarray(mask), page_view=pv)
             self.n_prefill_writes += 1
+            self.slots.advance(rid, n_real)
             # likelihood of the *next* tokens within this chunk
             nxt = toks[i + 1: i + n_real]
             if len(nxt):
@@ -276,10 +549,13 @@ class ModelRunner:
             t = batch[rid]
             seg[j, : len(t)] = t
             mask[j, : len(t)] = True
+        pv = self.slots.prepare(rids, write=width)
         logits, self.slots.cache, _ = self._jit_slot_extend(
             self.params, tokens=jnp.asarray(seg), cache=self.slots.cache,
-            slot_idx=sidx, token_mask=jnp.asarray(mask))
+            slot_idx=sidx, token_mask=jnp.asarray(mask), page_view=pv)
         self.n_prefill_writes += 1
+        for rid in rids:
+            self.slots.advance(rid, len(batch[rid]))
         lp = np.asarray(jax.nn.log_softmax(
             logits[:, :, : self.cfg.vocab], -1))
         for j, rid in enumerate(rids):
@@ -293,14 +569,23 @@ class ModelRunner:
         return out
 
     def drop(self, rid: int):
+        """Evict `rid`: slot (and pages, when paged) return to the pool."""
         self.slots.release(rid)
 
     # ----------------------------------------------------------- batched ops
     def speculative_caches(self, rids: Sequence[int]):
         """Device-side snapshot of the requests' slots as one compact
         batched cache (bucketed batch). Decoding on it never touches the
-        slotted cache — discarding it is the speculative rollback."""
-        return _g_gather(self.slots.cache, self.slots.padded_idx(rids))
+        slotted cache — discarding it is the speculative rollback. On a
+        paged pool this gathers only the mapped pages (plus SNAP_SLACK
+        columns of write headroom) into a plain stacked cache, so the
+        snapshot copies tokens actually held, not reserved capacity."""
+        idx = self.slots.padded_idx(rids)
+        pv = self.slots.snapshot_view(rids)
+        if pv is None:
+            return _g_gather(self.slots.cache, idx)
+        return self._jit_gather_paged(cache=self.slots.cache, slot_idx=idx,
+                                      page_view=pv)
 
     def extend_snapshot(self, caches: dict, tokens: np.ndarray):
         """Teacher-force `tokens` (B, T) into a speculative snapshot
@@ -338,10 +623,13 @@ class ModelRunner:
                 cache=caches)
         else:
             sidx = self.slots.padded_idx(rids)
+            pv = self.slots.prepare(rids, write=1)
             lg, self.slots.cache, _ = self._jit_slot_decode(
                 self.params,
                 tokens=jnp.asarray(self._pad_rows(toks, sidx.shape[0]))[:, None],
-                cache=self.slots.cache, slot_idx=sidx)
+                cache=self.slots.cache, slot_idx=sidx, page_view=pv)
+            for r in rids:
+                self.slots.advance(r, 1)
             new_cache = None
         return np.asarray(lg[:B, 0, : self.cfg.vocab]), new_cache
 
@@ -360,6 +648,7 @@ class ModelRunner:
             mask = np.concatenate(
                 [mask, np.broadcast_to(np.tril(np.ones((G, G), bool)),
                                        (rows - B, G, G))], axis=0)
+        pv = self.slots.prepare(rids, write=0)
         return self._jit_slot_verify(
             self.params,
             tokens=jnp.asarray(self._pad_rows(np.asarray(tokens, np.int32),
@@ -367,7 +656,7 @@ class ModelRunner:
             cache=self.slots.cache, slot_idx=sidx,
             rel_pos=jnp.asarray(self._pad_rows(np.asarray(rel_pos, np.int32),
                                                rows)),
-            seg_mask=jnp.asarray(mask))
+            seg_mask=jnp.asarray(mask), page_view=pv)
 
     def verify(self, rids: Sequence[int], tokens: np.ndarray,
                rel_pos: np.ndarray, seg_mask: np.ndarray) -> np.ndarray:
@@ -392,13 +681,16 @@ class ModelRunner:
                 continue
             sidx = self.slots.padded_idx(rids)
             toks = np.asarray([rid_tokens[r] for r in rids], np.int32)
+            pv = self.slots.prepare(rids, write=n)
             lg, self.slots.cache, _ = self._jit_slot_extend(
                 self.params,
                 tokens=jnp.asarray(self._pad_rows(toks, int(sidx.shape[0]))),
-                cache=self.slots.cache, slot_idx=sidx)
+                cache=self.slots.cache, slot_idx=sidx, page_view=pv)
             for i, r in enumerate(rids):
                 out[r] = np.asarray(lg[i, -1, : self.cfg.vocab])
+                self.slots.advance(r, n)
         return out
 
     def length(self, rid: int) -> int:
+        """Committed tokens for `rid`."""
         return self.slots.length(rid)

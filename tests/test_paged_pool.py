@@ -1,0 +1,378 @@
+"""Paged KV/SSM pool (DESIGN.md §2.8): the page-pool cache engine must
+be invisible — bitwise-identical logits and committed tokens vs the
+reserved-capacity resident path — across attention / SSM / hybrid / MLA
+/ sliding-window families, through eviction-and-reuse, speculative
+snapshot rollback and long-context admission; plus allocator properties
+(no leaks, no aliasing, deterministic block tables) and the paged Pallas
+decode kernel against its oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # declared dep; degrade so collection never hard-fails
+    from _hypothesis_fallback import given, settings, st
+
+from conftest import TINY_MAX_LEN as MAX_LEN, tiny_model_cfg as _tiny
+from repro.config import CoSineConfig, ModelConfig
+from repro.models import model as M
+from repro.serving.runner import ModelRunner, PagedSlotCacheManager
+from test_runner_slots import _tiny_exotic
+
+
+def _pair(cfg, n_slots=2, max_len=MAX_LEN, **paged_kw):
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    res = ModelRunner(cfg, params, max_len=max_len, n_slots=n_slots)
+    pag = ModelRunner(cfg, params, max_len=max_len, n_slots=n_slots,
+                      paged=True, **paged_kw)
+    return res, pag, cfg
+
+
+@pytest.fixture(params=["attn", "ssm", "hybrid"])
+def runners(request):
+    return _pair(_tiny(request.param), page_size=16)
+
+
+def _eq(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- bitwise equivalence
+def test_paged_matches_resident_bitwise(runners):
+    """Prefill, batched decode, chain verification and ragged commit all
+    produce the exact same bits on the paged pool as on the resident
+    slot cache — the paged read view is structurally the resident
+    layout, and the write scatter lands on the same columns."""
+    res, pag, cfg = runners
+    rng = np.random.default_rng(0)
+    rids = [0, 1, 2]                       # third admission grows the pool
+    for rid in rids:
+        toks = rng.integers(0, cfg.vocab, 7 + 3 * rid)
+        la, _ = res.prefill_request(rid, toks)
+        lb, _ = pag.prefill_request(rid, toks)
+        _eq(la, lb)
+
+    step = rng.integers(0, cfg.vocab, 3)
+    la, _ = res.decode(rids, step)
+    lb, _ = pag.decode(rids, step)
+    _eq(la, lb)
+
+    G = 4
+    vt = rng.integers(0, cfg.vocab, (3, G))
+    rel = np.broadcast_to(np.arange(G, dtype=np.int32), (3, G))
+    mask = np.broadcast_to(np.tril(np.ones((G, G), bool)), (3, G, G))
+    _eq(res.verify(rids, vt, rel, mask), pag.verify(rids, vt, rel, mask))
+
+    commits = {0: [1, 2], 1: [3], 2: [4, 5, 6]}
+    ta, tb = res.extend_committed(commits), pag.extend_committed(commits)
+    for rid in commits:
+        _eq(ta[rid], tb[rid])
+        assert res.length(rid) == pag.length(rid)
+
+
+@pytest.mark.parametrize("kind", ["mla", "swa"])
+def test_paged_matches_resident_exotic(kind):
+    """MLA latent caches and sliding-window ring caches page too: SWA
+    maps a fixed ring of pages (write columns pos % C land on the same
+    pages as the resident ring), MLA pages the joint latent rows."""
+    res, pag, cfg = _pair(_tiny_exotic(kind), page_size=16)
+    rng = np.random.default_rng(13)
+    toks = rng.integers(0, cfg.vocab, 13)
+    la, _ = res.prefill_request(0, toks)
+    lb, _ = pag.prefill_request(0, toks)
+    _eq(la, lb)
+    for t in rng.integers(0, cfg.vocab, 4):
+        la, _ = res.decode([0], np.asarray([t]))
+        lb, _ = pag.decode([0], np.asarray([t]))
+        _eq(la, lb)
+
+
+def test_paged_swa_prompt_past_ring_capacity():
+    """A prompt longer than the ring (300 tokens, window 16) wraps the
+    paged ring exactly like the resident one."""
+    res, pag, cfg = _pair(_tiny_exotic("swa"), max_len=512, page_size=16)
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, cfg.vocab, 300)
+    la, _ = res.prefill_request(0, toks)
+    lb, _ = pag.prefill_request(0, toks)
+    _eq(la, lb)
+    for t in rng.integers(0, cfg.vocab, 3):
+        da, _ = res.decode([0], np.asarray([int(t)]))
+        db, _ = pag.decode([0], np.asarray([int(t)]))
+        _eq(da, db)
+
+
+def test_paged_eviction_reuses_pages_exactly(runners):
+    """Dropping a request returns its pages to the free list; a new
+    tenant reusing those physical pages sees no KV leakage — its logits
+    stay bitwise equal to the resident path."""
+    res, pag, cfg = runners
+    rng = np.random.default_rng(1)
+    for rid in (0, 1):
+        toks = rng.integers(0, cfg.vocab, 12)
+        res.prefill_request(rid, toks)
+        pag.prefill_request(rid, toks)
+    held_before = pag.slots.pages_held()
+    res.drop(1)
+    pag.drop(1)
+    assert pag.slots.pages_held() < held_before
+
+    toks = rng.integers(0, cfg.vocab, 17)
+    la, _ = res.prefill_request(9, toks)
+    lb, _ = pag.prefill_request(9, toks)
+    _eq(la, lb)
+    step = rng.integers(0, cfg.vocab, 2)
+    la, _ = res.decode([0, 9], step)
+    lb, _ = pag.decode([0, 9], step)
+    _eq(la, lb)
+
+
+def test_paged_snapshot_is_rollback(runners):
+    """Speculative snapshots gather the mapped pages into a plain copy:
+    drafting on the snapshot never touches the pool, and discarding it
+    is a complete rollback — then committed decode still matches the
+    resident path bit-for-bit."""
+    res, pag, cfg = runners
+    rng = np.random.default_rng(2)
+    toks = rng.integers(0, cfg.vocab, 9)
+    res.prefill_request(0, toks)
+    pag.prefill_request(0, toks)
+
+    held = pag.slots.pages_held()
+    snap_a = res.speculative_caches([0])
+    snap_b = pag.speculative_caches([0])
+    for t in rng.integers(0, cfg.vocab, 3):
+        la, snap_a = res.decode([0], np.asarray([t]), caches=snap_a)
+        lb, snap_b = pag.decode([0], np.asarray([t]), caches=snap_b)
+        _eq(la, lb)
+    # drafting allocated nothing and advanced nothing in the pool
+    assert pag.slots.pages_held() == held
+    assert pag.length(0) == len(toks)
+
+    step = int(rng.integers(0, cfg.vocab))
+    la, _ = res.decode([0], np.asarray([step]))
+    lb, _ = pag.decode([0], np.asarray([step]))
+    _eq(la, lb)
+
+
+def test_long_context_overflows_reserved_but_fits_paged():
+    """The resident cache reserves max_len columns per slot; the paged
+    pool holds whatever pages a request actually touches. A prompt far
+    past max_len admits fine on the paged pool and matches a per-request
+    reference cache sized to fit."""
+    cfg = _tiny("attn")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    pag = ModelRunner(cfg, params, max_len=32, n_slots=2, paged=True,
+                      page_size=16)
+    rng = np.random.default_rng(6)
+    toks = rng.integers(0, cfg.vocab, 100)
+    lg, _ = pag.prefill_request(0, toks)
+
+    cache = M.init_cache(cfg, 1, 256, dtype=jnp.float32)
+    rlg, cache, _ = M.prefill(params, cfg, jnp.asarray(toks)[None], cache)
+    np.testing.assert_allclose(lg, np.asarray(rlg[0, -1, :cfg.vocab]),
+                               atol=1e-5)
+    assert pag.length(0) == 100
+    assert pag.slots.pages_held() >= 100 // 16
+    for t in rng.integers(0, cfg.vocab, 3):
+        dl, _ = pag.decode([0], np.asarray([int(t)]))
+        rl, cache, _ = M.decode_step(params, cfg, jnp.asarray([[int(t)]]),
+                                     cache)
+        np.testing.assert_allclose(dl[0], np.asarray(rl[0, 0, :cfg.vocab]),
+                                   atol=1e-5)
+
+
+# --------------------------------------------------------- allocator physics
+def _ops_stream(rng, n_ops, max_rids=6):
+    """A random admit/write/release schedule over a few request ids."""
+    ops, live = [], set()
+    for _ in range(n_ops):
+        r = int(rng.integers(0, max_rids))
+        kind = rng.choice(["admit", "write", "release"])
+        if kind == "admit" and r not in live:
+            ops.append(("admit", r)); live.add(r)
+        elif kind == "write" and r in live:
+            ops.append(("write", r, int(rng.integers(1, 40))))
+        elif kind == "release" and r in live:
+            ops.append(("release", r)); live.discard(r)
+    return ops
+
+
+def _replay(mgr, ops):
+    for op in ops:
+        if op[0] == "admit":
+            mgr.admit(op[1])
+        elif op[0] == "write":
+            mgr.prepare([op[1]], write=op[2])
+            mgr.advance(op[1], op[2])
+        else:
+            mgr.release(op[1])
+
+
+def _mgr(kind="attn", **kw):
+    kw.setdefault("page_size", 16)
+    return PagedSlotCacheManager(_tiny(kind), MAX_LEN, n_slots=2, **kw)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_no_page_leaks(seed):
+    """Conservation: mapped pages + free pages == pool size minus the
+    two reserved pages, at every point of a random schedule; releasing
+    everything returns the allocator to empty."""
+    rng = np.random.default_rng(seed)
+    mgr = _mgr()
+    ops = _ops_stream(rng, 30)
+    for op in ops:
+        _replay(mgr, [op])
+        assert (mgr.pages_held() + len(mgr._free_pages)
+                == mgr.n_pages - mgr._RESERVED)
+    for rid in list(mgr.tables):
+        mgr.release(rid)
+    assert mgr.pages_held() == 0
+    assert len(mgr._free_pages) == mgr.n_pages - mgr._RESERVED
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_no_page_aliasing(seed):
+    """No physical page is ever mapped by two requests (or present in a
+    table and on the free list) — including across pool growth."""
+    rng = np.random.default_rng(seed)
+    mgr = _mgr()
+    for op in _ops_stream(rng, 30):
+        _replay(mgr, [op])
+        mapped = [p for t in mgr.tables.values() for p in t if p >= 0]
+        assert len(mapped) == len(set(mapped))
+        assert not set(mapped) & set(mgr._free_pages)
+        assert all(p >= mgr._RESERVED for p in mapped)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_block_tables_deterministic(seed):
+    """The allocator is a pure function of the op schedule: two managers
+    replaying the same stream hold identical block tables and emit
+    identical page views (batch composition independence)."""
+    rng = np.random.default_rng(seed)
+    ops = _ops_stream(rng, 25)
+    a, b = _mgr(), _mgr()
+    _replay(a, ops)
+    _replay(b, ops)
+    assert a.tables == b.tables
+    live = sorted(a.tables)
+    if live:
+        _eq(a.view(live), b.view(live))
+
+
+def test_windowed_tables_are_fixed_rings():
+    """SWA block tables are rings of C/page_size entries, page_size
+    fitted down until it divides the ring capacity."""
+    mgr = PagedSlotCacheManager(_tiny_exotic("swa"), MAX_LEN, n_slots=2,
+                                page_size=64)
+    assert mgr.ring_pages > 0
+    assert mgr.ring_pages * mgr.page_size % mgr.page_size == 0
+    mgr.admit(0)
+    assert len(mgr.tables[0]) == mgr.ring_pages
+    mgr.prepare([0], write=mgr.page_size * mgr.ring_pages + 5)
+    mgr.advance(0, mgr.page_size * mgr.ring_pages + 5)
+    # wrapping never grows the ring
+    assert len(mgr.tables[0]) == mgr.ring_pages
+    assert mgr.pages_held() == mgr.ring_pages
+
+
+def test_fragmentation_accounting():
+    mgr = _mgr()
+    assert mgr.fragmentation() == 0.0
+    mgr.admit(0)
+    mgr.prepare([0], write=mgr.page_size)       # exactly one full page
+    mgr.advance(0, mgr.page_size)
+    assert mgr.fragmentation() == 0.0
+    mgr.prepare([0], write=1)                   # one token on a fresh page
+    mgr.advance(0, 1)
+    held = mgr.pages_held() * mgr.page_size
+    assert abs(mgr.fragmentation()
+               - (1.0 - (mgr.page_size + 1) / held)) < 1e-12
+
+
+# ----------------------------------------------------------- paged kernel
+def _paged_fixture(rng, B, H, G, Dk, Dv, ps, lengths):
+    """Contiguous-prefix page layout: request b holds [0, L_b)."""
+    n_pages = 2 + sum(-(-L // ps) for L in lengths)
+    nv = max(-(-L // ps) for L in lengths)
+    nv = 1 << (nv - 1).bit_length()
+    q = jnp.asarray(rng.normal(size=(B, H, G, Dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(n_pages, H, ps, Dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(n_pages, H, ps, Dv)), jnp.float32)
+    pos = np.full((n_pages, ps), -1, np.int32)
+    tbl = np.ones((B, nv), np.int32)            # NULL page filler
+    nxt = 2
+    for b, L in enumerate(lengths):
+        for j in range(-(-L // ps)):
+            n = min(ps, L - j * ps)
+            pos[nxt, :n] = j * ps + np.arange(n)
+            tbl[b, j] = nxt
+            nxt += 1
+    qp = jnp.asarray([L - 1 for L in lengths], jnp.int32)
+    return q, k, v, jnp.asarray(pos), qp, jnp.asarray(tbl)
+
+
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("G", [1, 4])
+def test_paged_kernel_matches_oracle(window, G):
+    from repro.kernels.decode_attention.ops import decode_attention_paged
+    from repro.kernels.decode_attention.ref import decode_attention_paged_ref
+    rng = np.random.default_rng(0)
+    args = _paged_fixture(rng, B=3, H=2, G=G, Dk=16, Dv=16, ps=8,
+                          lengths=[25, 9, 31])
+    out = decode_attention_paged(*args, scale=0.25, window=window)
+    ref = decode_attention_paged_ref(*args, scale=0.25, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_paged_kernel_skips_unmapped_pages():
+    """NULL-page entries (slot_pos all -1) are exact no-ops: shrinking
+    the view to only the mapped pages changes nothing."""
+    from repro.kernels.decode_attention.ops import decode_attention_paged
+    rng = np.random.default_rng(1)
+    q, k, v, pos, qp, tbl = _paged_fixture(rng, B=2, H=2, G=4, Dk=16,
+                                           Dv=16, ps=8, lengths=[9, 17])
+    wide = jnp.concatenate(
+        [tbl, jnp.ones((2, 4), jnp.int32)], axis=1)     # extra NULL entries
+    out = decode_attention_paged(q, k, v, pos, qp, tbl, scale=0.25)
+    out_w = decode_attention_paged(q, k, v, pos, qp, wide, scale=0.25)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_w), atol=1e-6)
+
+
+# ----------------------------------------------------------- engine lossless
+@pytest.mark.parametrize("strategy", ["cosine", "specinfer"])
+def test_engine_committed_tokens_identical_paged(strategy):
+    """End to end: the engine with paged_pool=True commits exactly the
+    same tokens as with the resident cache — same seed, same prompts,
+    greedy speculative decoding (random-init models; losslessness does
+    not require trained weights)."""
+    from repro.serving.engine import SpeculativeEngine
+    tcfg = _tiny("hybrid")
+    tparams = M.init_params(jax.random.PRNGKey(0), tcfg)
+    dcfg = ModelConfig(name="tiny-draft", family="dense", n_layers=1,
+                       d_model=48, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=96, vocab=50, tie_embeddings=True,
+                       dtype="float32")
+    drafters = [(dcfg, M.init_params(jax.random.PRNGKey(i + 1), dcfg),
+                 f"d{i}") for i in range(2)]
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, 50, 8).tolist() for _ in range(3)]
+
+    outs = []
+    for paged in (False, True):
+        cos = CoSineConfig(n_drafters=2, draft_len=4, drafters_per_request=2,
+                           tree_width=2, paged_pool=paged, page_size=16)
+        eng = SpeculativeEngine((tcfg, tparams), drafters, cos,
+                                strategy=strategy, max_len=MAX_LEN, seed=0)
+        for p in prompts:
+            eng.submit(p, max_new_tokens=10, domain="d0")
+        eng.run()
+        outs.append({r.rid: list(r.generated) for r in eng.pool.completed})
+    assert outs[0] == outs[1]
