@@ -20,6 +20,13 @@ are runner-dependent noise and are reported but never gated):
   * traffic_frac / residency_x -- paged-pool rows (``paged`` prefix):
                    decode-view traffic must stay ∝ tokens held and the
                    fixed-memory residency multiple must not drop
+  * draft_ratio   -- quantized-drafter serving row (``quant`` prefix):
+                   int8-node drafting pace over bf16 must not regress
+  * int8_vs_bf16_x / oracle_exact / weight_bytes_x -- int8 GEMV kernel
+                   row (``kernel_int8_gemv`` prefix), absolute-gated:
+                   the fused path must beat bf16 dense decode, stay
+                   bitwise-equal to its oracle, and keep ~2x fewer
+                   resident weight bytes
 
 Wall-clock rows (benchmarks/wallclock.py, ``--prefix wallclock``) are
 instead gated with ABSOLUTE bounds (ABS_GATES): measured overlap must
@@ -71,6 +78,11 @@ GATES = {
     # requests resident at fixed cache memory vs the reserved layout; a
     # drop means the pool started burning pages it does not need
     "residency_x": ("down", 0.10),
+    # --- quantized-drafter rows (DESIGN.md §2.9) ---
+    # simulated drafting ms per drafted token, int8 node over bf16 node
+    # (quant_serving row): a rise means the mixed pool stopped pricing /
+    # exercising the int8 node's faster step
+    "draft_ratio": ("up", 0.15),
 }
 # metric -> (bound, threshold): ABSOLUTE gates for the wall-clock rows
 # (benchmarks/wallclock.py), where run-to-run wall noise makes relative
@@ -94,6 +106,16 @@ ABS_GATES = {
     # (~0.06-0.12 measured: the sim does not model host dispatch time,
     # which dilutes the measured utilization on a CPU host)
     "overlap_gap": ("max", 0.25),
+    # --- int8 GEMV kernel row (kernel_int8_gemv prefix) ---
+    # the fused int8 path must actually beat the bf16 dense matvec at
+    # the B-small drafter decode shape (measured ~3.6-4x on this host;
+    # the floor only catches it turning into a loss)
+    "int8_vs_bf16_x": ("min", 1.05),
+    # interpret-mode Pallas kernel vs pure-jnp oracle, bitwise at a
+    # tile-aligned shape — correctness, not speed, so absolute
+    "oracle_exact": ("min", 1.0),
+    # resident weight bytes bf16 over int8+scales (deterministic ~2.0)
+    "weight_bytes_x": ("min", 1.5),
 }
 # reported in the delta table but never gated (noisy or informational)
 REPORT_ONLY = (
@@ -270,7 +292,7 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", required=True, help="checked-in baseline JSON")
     ap.add_argument(
         "--prefix",
-        default="fig7,traffic,paged",
+        default="fig7,traffic,paged,quant,kernel_int8_gemv",
         help="comma-separated name prefixes to gate (kernel wall-times are noise)",
     )
     ap.add_argument(

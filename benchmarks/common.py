@@ -92,6 +92,28 @@ def build_fixture(steps_target: int = 500, steps_drafter: int = 300,
                    vocab=VOCAB)
 
 
+def greedy_reference(tcfg, tparams, prompt, n, max_len=512):
+    """The target model's unassisted greedy continuation — the exactness
+    oracle every lossless gate compares committed streams against
+    (speculation may only change *which* drafts are proposed, never the
+    tokens the target commits)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import model as M
+    cache = M.init_cache(tcfg, 1, max_len, dtype=jnp.float32)
+    lg, cache, _ = M.prefill(tparams, tcfg, jnp.asarray(prompt)[None, :],
+                             cache)
+    last = np.asarray(lg[0, -1, :tcfg.vocab])
+    out = []
+    for _ in range(n):
+        t = int(np.argmax(last))
+        out.append(t)
+        lg, cache, _ = M.decode_step(tparams, tcfg, jnp.asarray([[t]]), cache)
+        last = np.asarray(lg[0, 0, :tcfg.vocab])
+    return out
+
+
 def completion_stats(completed) -> dict:
     """Latency statistics over a list of completed `Request`s, hardened
     against zero-token completions.

@@ -71,6 +71,29 @@ def run(fixture, n_iters: int = 20):
         target.verify([0], toks, rel, mask)
     t_verify = (time.time() - t0) / n_iters * 1e6
 
+    # int8 drafter: the GEMV phase is weight-streaming-bound, so
+    # weight-only int8 (models/quantize.py) halves its roofline bytes.
+    # Same decode loop on the quantized drafter, plus the analytic
+    # byte split that feeds analysis/analytic.py's weight-stream term.
+    import jax
+    from repro.analysis.analytic import weight_stream_bytes
+    from repro.models.quantize import quantize_params
+    qcfg = dcfg.with_overrides(quant="int8")
+    qdrafter = ModelRunner(qcfg, quantize_params(d0[1]), 128)
+    qdrafter.prefill_request(0, ctx)
+    t0 = time.time()
+    for _ in range(n_iters):
+        tok = np.array([1], np.int32)
+        for _ in range(gamma):
+            lg, _ = qdrafter.decode([0], tok)
+            tok = np.argmax(lg, -1).astype(np.int32)
+    t_draft_q = (time.time() - t0) / n_iters * 1e6
+
+    n_params = float(sum(np.prod(l.shape)
+                         for l in jax.tree.leaves(d0[1])))
+    wb_bf16 = weight_stream_bytes(dcfg, n_params)
+    wb_int8 = weight_stream_bytes(qcfg, n_params)
+
     rows = []
     tot_d = gemv_d + gemm_d
     tot_v = gemv_v + gemm_v
@@ -80,4 +103,8 @@ def run(fixture, n_iters: int = 20):
                  f"gemm_frac={gemm_v / tot_v:.3f}"))
     rows.append(("fig2a_us_per_drafted_token", t_draft / gamma, ""))
     rows.append(("fig2a_us_per_verified_token", t_verify / gamma, ""))
+    rows.append(("fig2a_us_per_drafted_token_int8", t_draft_q / gamma,
+                 f"bf16_us={t_draft / gamma:.1f}"))
+    rows.append(("fig2a_draft_weight_bytes_x", wb_bf16 / wb_int8,
+                 f"bf16_B={wb_bf16:.3g} int8_B={wb_int8:.3g}"))
     return rows

@@ -46,8 +46,10 @@ def make_arrivals(mode: str, n: int, seed: int = 0):
 
 
 def serve_online(fixture, strategy: str, mode: str, n_requests: int = 10,
-                 max_new: int = 16, profiles=None, trace_path=None):
-    eng = fixture.engine(strategy, drafter_profiles=profiles)
+                 max_new: int = 16, profiles=None, trace_path=None,
+                 drafters_override=None, return_engine=False):
+    eng = fixture.engine(strategy, drafter_profiles=profiles,
+                         drafters_override=drafters_override)
     arr = make_arrivals(mode, n_requests, seed=7)
     for (p, dom), t in zip(fixture.corpus.prompts(n_requests, 16, seed=51),
                            arr):
@@ -66,6 +68,8 @@ def serve_online(fixture, strategy: str, mode: str, n_requests: int = 10,
         export_engine_trace(eng, trace_path)
     cstats = completion_stats(eng.pool.completed)
     stats = eng.stats
+    if return_engine:
+        return eng, cstats
     dutil = dlate = ""
     n_side = n_dropped = 0
     if eng.executor is not None:
@@ -168,4 +172,54 @@ def run(fixture, strategies=("ar", "specinfer", "pipeinfer", "cosine"),
         extra = (f";bubble_vs_pipeinfer="
                  f"{m['bubble_ms'] / max(base['bubble_ms'], 1e-9):.2f}")
         rows.append((f"fig7_hetero_slow{f:g}x_cosine", us, _fmt(m, extra)))
+
+    rows.extend(quant_rows(fixture, n_req=n_req, max_new=max_new))
     return rows
+
+
+def quant_rows(fixture, n_req: int = 6, max_new: int = 12):
+    """Mixed-precision pool row (DESIGN.md §2.9): drafter 0 runs
+    weight-only int8 beside the bf16 rest, under cosine routing/fusion.
+
+    Gated claims:
+      lossless    — committed streams bitwise equal the target's greedy
+                    reference (zero tolerance: quantization only changes
+                    *drafts*, never what the target commits).
+      draft_ratio — simulated drafting ms per drafted token on the int8
+                    node over a bf16 node: the engine's default pool
+                    profiles must keep pricing the int8 node at
+                    INT8_DRAFT_SPEED (~0.6), and the routed load must
+                    actually exercise it.
+    """
+    from benchmarks.common import greedy_reference
+    d = list(fixture.drafters)
+    override = [(d[0][0].with_overrides(quant="int8"), d[0][1], d[0][2])] \
+        + d[1:]
+    t0 = time.time()
+    eng, cstats = serve_online(fixture, "cosine", "high", n_requests=n_req,
+                               max_new=max_new, drafters_override=override,
+                               return_engine=True)
+    us = (time.time() - t0) * 1e6
+
+    tcfg, tparams = fixture.target
+    comp = sorted((r for r in eng.pool.completed if r.generated),
+                  key=lambda r: r.rid)
+    ok = all(r.generated == greedy_reference(tcfg, tparams, r.prompt,
+                                             len(r.generated))
+             for r in comp)
+
+    # per-node simulated drafting pace: busy ms on the node's stage clock
+    # over the token-decodes it executed (routed sub-batches x draft len)
+    nodes = eng.executor.cluster.nodes
+    dtoks = eng.stats.node_drafted
+    pace = [n.busy_ms / t if t else 0.0 for n, t in zip(nodes, dtoks)]
+    bf16_pace = [p for p, c in zip(pace[1:], override[1:]) if p > 0]
+    ratio = (pace[0] / (sum(bf16_pace) / len(bf16_pace))
+             if pace[0] > 0 and bf16_pace else 0.0)
+
+    speeds = "|".join(f"{p.speed:g}" for p in eng.drafter_profiles)
+    return [("quant_serving_int8_pool", us,
+             f"ms_per_tok={cstats['ms_per_tok']:.1f};"
+             f"lossless={float(ok):.0f};draft_ratio={ratio:.3f};"
+             f"node_speeds={speeds};"
+             f"dtoks={'|'.join(str(c) for c in dtoks)}")]

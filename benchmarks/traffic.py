@@ -27,10 +27,9 @@ from __future__ import annotations
 import math
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import completion_stats
+from benchmarks.common import completion_stats, greedy_reference
 
 SLO_MS = 6000.0
 # the overload rows run a tight SLO (same order as one request's natural
@@ -63,21 +62,6 @@ def make_trace(mode: str, n: int, seed: int = 0) -> np.ndarray:
     else:
         raise ValueError(f"unknown trace mode {mode!r}")
     return np.cumsum(gaps)
-
-
-def _greedy_reference(tcfg, tparams, prompt, n, max_len=512):
-    from repro.models import model as M
-    cache = M.init_cache(tcfg, 1, max_len, dtype=jnp.float32)
-    lg, cache, _ = M.prefill(tparams, tcfg, jnp.asarray(prompt)[None, :],
-                             cache)
-    last = np.asarray(lg[0, -1, :tcfg.vocab])
-    out = []
-    for _ in range(n):
-        t = int(np.argmax(last))
-        out.append(t)
-        lg, cache, _ = M.decode_step(tparams, tcfg, jnp.asarray([[t]]), cache)
-        last = np.asarray(lg[0, 0, :tcfg.vocab])
-    return out
 
 
 def serve_trace(fixture, mode: str, admission: bool, n_requests: int = 24,
@@ -122,7 +106,7 @@ def serve_trace(fixture, mode: str, admission: bool, n_requests: int = 24,
         tcfg, tparams = fixture.target
         sample = sorted((r for r in comp if r.generated),
                         key=lambda r: r.rid)[:lossless_sample]
-        ok = all(r.generated == _greedy_reference(tcfg, tparams, r.prompt,
+        ok = all(r.generated == greedy_reference(tcfg, tparams, r.prompt,
                                                   len(r.generated))
                  for r in sample)
         out["lossless"] = float(ok)

@@ -101,6 +101,19 @@ def _kv_cache_bytes(cfg: ModelConfig, kv_len: float, batch: float,
     return total
 
 
+def weight_stream_bytes(cfg: ModelConfig, n_params: float) -> float:
+    """Bytes to stream `n_params` weights through HBM once. bf16 models
+    stream 2 B/param; a weight-only-int8 model (cfg.quant, DESIGN.md
+    §2.9) streams 1 B/param plus the per-output-channel f32 scales —
+    one f32 per d_model-long input column, i.e. ~4/d_model extra bytes
+    per param, accounted but negligible. The KV-cache side of the dtype
+    story lives in `_kv_cache_bytes` (cfg.kv_dtype quantizes cached
+    *activations*; cfg.quant quantizes *weights* — orthogonal knobs)."""
+    if getattr(cfg, "quant", "") == "int8":
+        return n_params * (1.0 + 4.0 / max(cfg.d_model, 1))
+    return n_params * 2.0
+
+
 @dataclass
 class Estimate:
     flops: float            # global, one step
@@ -127,14 +140,15 @@ def estimate(cfg: ModelConfig, shape_name: str, step: str,
         tokens = B * S
         flops = _per_token_matmul_flops(cfg) * tokens \
             + B * _attn_context_flops(cfg, S, S, causal=True)
-        hbm = P_act * 2 * max(B / 1, 1) ** 0 + _kv_cache_bytes(cfg, S, B) \
+        hbm = weight_stream_bytes(cfg, P_act) + _kv_cache_bytes(cfg, S, B) \
             + tokens * cfg.d_model * cfg.n_layers * 2 * 2.0
-        hbm += P_act * 2  # weights stream once per microbatch
+        # weights stream once more per microbatch
+        hbm += weight_stream_bytes(cfg, P_act)
     else:  # decode / verify: q_tokens per request
         q = gamma if step == "verify" else 1
         tokens = B * q
         flops = _per_token_matmul_flops(cfg) * tokens \
             + B * _attn_context_flops(cfg, q, S, causal=False)
-        hbm = P_act * 2 + _kv_cache_bytes(cfg, S, B) \
+        hbm = weight_stream_bytes(cfg, P_act) + _kv_cache_bytes(cfg, S, B) \
             + tokens * cfg.d_model * cfg.n_layers * 2 * 2.0
     return Estimate(flops=flops, hbm_bytes=hbm)

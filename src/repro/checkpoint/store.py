@@ -63,9 +63,18 @@ def save_checkpoint(path: str, params, meta: Optional[dict] = None):
         f.write(msgpack.packb(payload, use_bin_type=True))
 
 
-def load_checkpoint(path: str, shardings=None):
+def load_checkpoint(path: str, shardings=None, quantize: Optional[str] = None):
     """Restore params; if `shardings` (matching pytree of NamedSharding)
-    is given, each tensor is device_put with its sharding on load."""
+    is given, each tensor is device_put with its sharding on load.
+
+    quantize="int8" is the calibrate-then-swap hook (DESIGN.md §2.9):
+    the trained f32 checkpoint is loaded, per-output-channel symmetric
+    int8 scales are calibrated from the weights themselves, and the
+    dense/embedding leaves are swapped for ``{"w8", "scale"}`` dicts
+    before the params are returned. An already-quantized checkpoint
+    (int8 leaves round-trip through the msgpack format unchanged)
+    passes through idempotently.
+    """
     with open(path, "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
     meta = payload.pop("__meta__", {})
@@ -75,6 +84,11 @@ def load_checkpoint(path: str, shardings=None):
             spec["shape"])
         flat[k] = jnp.asarray(arr)
     params = _unflatten(flat)
+    if quantize == "int8":
+        from repro.models.quantize import quantize_params
+        params = quantize_params(params)
+    elif quantize not in (None, "", "none"):
+        raise ValueError(f"unknown quantize mode {quantize!r}")
     if shardings is not None:
         params = jax.tree.map(
             lambda x, s: jax.device_put(x, s), params, shardings)

@@ -120,6 +120,12 @@ class ModelConfig:
     decode_attn: str = "scan"
     # KV cache dtype: "bf16" | "int8" (quantized serving caches — §Perf)
     kv_dtype: str = "bf16"
+    # weight-only quantization (models/quantize.py, DESIGN.md §2.9):
+    # "" (inherit the pool default, CoSineConfig.drafter_quant) | "none"
+    # | "int8" (per-output-channel symmetric int8 dense/embed weights,
+    # calibrated from the trained checkpoint and swapped at load).
+    # Orthogonal to kv_dtype, which quantizes cache *activations*.
+    quant: str = ""
     # KV block size for cached attention (0 -> 1024); with seq-parallel KV
     # set this to capacity / mesh_model so block boundaries = shard
     # boundaries (no resharding)
@@ -344,3 +350,12 @@ class CoSineConfig:
     pool_pages: int = 0            # pages pre-allocated per model pool
     #                                (0 -> small auto size; the pool grows
     #                                by doubling when the free list empties)
+    # --- weight-only drafter quantization (DESIGN.md §2.9) ---
+    # pool-wide default for drafters whose ModelConfig.quant is ""
+    # (unset): "none" keeps f32/bf16 weights, "int8" calibrates and
+    # swaps per-output-channel int8 weights at engine construction.
+    # A per-drafter ModelConfig.quant overrides this, so one pool can
+    # run an int8 node beside bf16 nodes (configs/drafters.py).
+    # Committed streams stay greedy-exact either way: only drafter
+    # proposals change, never the target's accept/correct walk.
+    drafter_quant: str = "none"

@@ -9,6 +9,15 @@ actually training each drafter on its own synthetic domain corpus.
 """
 from repro.config import ModelConfig
 
+# weight-only int8 variant of the same drafter (DESIGN.md §2.9): the
+# checkpoint is calibrated and swapped at load; beside bf16 nodes this
+# makes the pool genuinely heterogeneous in both pace and proposals
+def int8_variant(cfg: ModelConfig) -> ModelConfig:
+    """Per-node override: run this drafter with int8 weights."""
+    return cfg.with_overrides(quant="int8",
+                              name=cfg.name + "-int8")
+
+
 LLAMA_68M = ModelConfig(
     name="llama-68m",
     family="dense",
@@ -22,13 +31,20 @@ LLAMA_68M = ModelConfig(
     rope_theta=10000.0,
 )
 
+LLAMA_68M_INT8 = int8_variant(LLAMA_68M)
 
-def tiny_drafter(vocab: int, name: str = "tiny-drafter") -> ModelConfig:
-    """CPU-trainable drafter in the same family as the target."""
+
+def tiny_drafter(vocab: int, name: str = "tiny-drafter",
+                 quant: str = "") -> ModelConfig:
+    """CPU-trainable drafter in the same family as the target.
+
+    `quant`: "" inherits the pool-wide `CoSineConfig.drafter_quant`
+    default; "int8" pins this node to the weight-only int8 path.
+    """
     return ModelConfig(
         name=name, family="dense", n_layers=2, d_model=128,
         n_heads=4, n_kv_heads=2, head_dim=32, d_ff=384, vocab=vocab,
-        tie_embeddings=True,
+        tie_embeddings=True, quant=quant,
     )
 
 

@@ -65,6 +65,26 @@ def homogeneous_profiles(n: int) -> tuple:
     return tuple(DrafterProfile() for _ in range(n))
 
 
+# Default pace multiple of a weight-only-int8 drafter node (DESIGN.md
+# §2.9): the drafter decode step is memory-roofline-bound on the weight
+# stream (§3.2), and int8 halves it; activations, KV traffic and the
+# host dispatch floor keep the realized step from a clean 0.5x — 0.6 is
+# the analytic-roofline estimate (analysis/analytic.py weight-bytes
+# term) and `calibrated_profiles()` recovers whatever pace the node
+# actually sustains from its measured (b, l, step_ms) observations.
+INT8_DRAFT_SPEED = 0.6
+
+
+def pool_profiles(drafter_cfgs) -> tuple:
+    """Per-node default profiles for a possibly mixed-precision pool:
+    int8 weight-only nodes draft at `INT8_DRAFT_SPEED` x the bf16 step,
+    everything else keeps the homogeneous default."""
+    return tuple(
+        DrafterProfile(speed=INT8_DRAFT_SPEED
+                       if getattr(c, "quant", "") == "int8" else 1.0)
+        for c in drafter_cfgs)
+
+
 @dataclass
 class LatencyModel:
     """T_ssm(b, l, gamma) and T_llm(b, l, Gamma) in milliseconds.

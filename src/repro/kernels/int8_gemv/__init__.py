@@ -1,0 +1,4 @@
+"""Fused dequant-and-GEMV Pallas kernel for the int8 drafter decode
+hot path (weights stay int8 in HBM, per-output-channel scales applied
+in-register). `ops.py` = jit'd entry points (Pallas kernel + the
+blocked XLA path used on CPU hosts), `ref.py` = pure-jnp oracle."""

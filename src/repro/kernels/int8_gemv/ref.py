@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused int8 dequant-GEMV."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_gemv_ref(x, w8, scale):
+    """y = (x @ w8) * scale, f32 accumulation.
+
+    x: (B, K) activations (any float dtype); w8: (K, N) int8 weights;
+    scale: (1, N) or (N,) f32 per-output-channel scales (absmax/127
+    along K). Returns (B, N) f32. The reduction is a single dot over
+    the full K axis — the kernel tiles only the output (N) axis, so in
+    interpret mode the two are bitwise-identical on tile-aligned
+    shapes (column tiling never reorders a per-element K reduction).
+    """
+    y = jnp.dot(x.astype(jnp.float32), w8.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return y * scale.reshape(1, -1)

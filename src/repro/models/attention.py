@@ -28,6 +28,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig, MLAConfig
 from repro.models.layers import apply_rope, dense_init, rms_norm_headwise
+from repro.models.quantize import qdot
 
 NEG_INF = -1e30
 RING_MARGIN = 128  # extra ring slots beyond the window (max verify segment)
@@ -412,9 +413,11 @@ def gqa_params(key, cfg: ModelConfig, cross: bool = False):
 def _project_qkv(p, cfg: ModelConfig, x, positions, rope: bool):
     B, T, _ = x.shape
     hd = cfg.resolved_head_dim
-    q = x @ p["wq"]
-    k = x @ p["wk"]
-    v = x @ p["wv"]
+    # qdot: plain matmul for f32/bf16 params, fused dequant for the
+    # weight-only-int8 drafter path (models/quantize.py)
+    q = qdot(x, p["wq"])
+    k = qdot(x, p["wk"])
+    v = qdot(x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, T, cfg.n_heads, hd)
@@ -474,7 +477,7 @@ def gqa_attention(p, cfg: ModelConfig, x, positions, *, cache=None,
             block=block, seg_mask=seg_mask, slot_idx=slot_idx, write=write,
             par=par, token_mask=token_mask, page_view=page_view)
     out = out.reshape(B, T, hq * hd)
-    return out @ p["wo"], new_cache
+    return qdot(out, p["wo"]), new_cache
 
 
 def cross_attention(p, cfg: ModelConfig, x, kv_src=None, cache=None,
@@ -490,13 +493,13 @@ def cross_attention(p, cfg: ModelConfig, x, kv_src=None, cache=None,
     B, T, _ = x.shape
     hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     g = hq // hkv
-    q = (x @ p["wq"]).reshape(B, T, hq, hd)
+    q = qdot(x, p["wq"]).reshape(B, T, hq, hd)
     if cfg.qkv_bias:
         q = q + p["bq"].reshape(hq, hd)
     if kv_src is not None:
         S = kv_src.shape[1]
-        k = (kv_src @ p["wk"]).reshape(B, S, hkv, hd)
-        v = (kv_src @ p["wv"]).reshape(B, S, hkv, hd)
+        k = qdot(kv_src, p["wk"]).reshape(B, S, hkv, hd)
+        v = qdot(kv_src, p["wv"]).reshape(B, S, hkv, hd)
         if cfg.qkv_bias:
             k = k + p["bk"].reshape(hkv, hd)
             v = v + p["bv"].reshape(hkv, hd)
@@ -520,7 +523,7 @@ def cross_attention(p, cfg: ModelConfig, x, kv_src=None, cache=None,
     out = blocked_attention(qg, kr, vr, qpos, spr, scale=hd ** -0.5,
                             causal=False, window=0, block=block)
     out = out.reshape(B, T, hq * hd)
-    return out @ p["wo"], cache
+    return qdot(out, p["wo"]), cache
 
 
 # =====================================================================

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.models.quantize import qdot
 
 
 def dense_init(key, shape, scale=None, dtype=jnp.float32):
@@ -86,7 +87,9 @@ def mlp_params(key, cfg: ModelConfig, d_model: int, d_ff: int):
 
 
 def apply_mlp(p, x, cfg: ModelConfig):
+    # matmuls dispatch through qdot so the same step functions run
+    # weight-only-int8 params (models/quantize.py) unchanged
     if cfg.mlp_type == "gelu":
-        h = jax.nn.gelu(x @ p["wi"] + p["bi"])
-        return h @ p["wo"] + p["bo"]
-    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+        h = jax.nn.gelu(qdot(x, p["wi"]) + p["bi"])
+        return qdot(h, p["wo"]) + p["bo"]
+    return qdot(jax.nn.silu(qdot(x, p["wg"])) * qdot(x, p["wu"]), p["wd"])

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.config import ModelConfig
 from repro.models import attention as attn
+from repro.models import quantize
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (apply_mlp, apply_norm, embed_init,
                                  mlp_params, norm_params)
@@ -161,6 +162,17 @@ def init_params(key, cfg: ModelConfig):
 
 # ====================================================== caches
 
+def _reject_mla_int8(cfg: ModelConfig):
+    """MLA caches store the *latent* KV (compressed projections consumed
+    by einsum up-projections), which has no per-head int8 layout yet —
+    fail at construction rather than silently keeping a bf16 pool."""
+    if cfg.kv_dtype == "int8":
+        raise ValueError(
+            "kv_dtype='int8' is not supported with attention='mla': the "
+            "latent KV cache has no quantized layout (use GQA, or "
+            "kv_dtype='bf16' for MLA models)")
+
+
 def _sublayer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
                     max_len: int, dtype, cross_len: int):
     window = 0 if spec.mixer == "ssm" else effective_window(cfg)
@@ -171,6 +183,7 @@ def _sublayer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
         c["self"] = attn.make_kv_cache(batch, cap, cfg.n_kv_heads, hd, hd,
                                        dtype, quantized=cfg.kv_dtype == "int8")
     elif spec.mixer == "mla":
+        _reject_mla_int8(cfg)
         cap = attn.cache_capacity(cfg, max_len, window)
         c["self"] = attn.make_mla_cache(batch, cap, cfg, dtype)
     else:
@@ -347,6 +360,7 @@ def init_paged_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16, *,
                     n_pages, page_size, cfg.n_kv_heads, hd, hd, dtype,
                     quantized=cfg.kv_dtype == "int8")
             elif spec.mixer == "mla":
+                _reject_mla_int8(cfg)
                 c["self"] = attn.make_paged_mla_cache(n_pages, page_size,
                                                       cfg, dtype)
             else:
@@ -666,8 +680,12 @@ def _encode(params, cfg: ModelConfig, frontend):
 
 
 def _logits(params, cfg: ModelConfig, x):
-    head = params["embed"].T if cfg.tie_embeddings else params["head"]
-    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    # tied_logits/qdot accept both plain f32/bf16 weights and the
+    # weight-only-int8 {"w8","scale"} form (models/quantize.py)
+    if cfg.tie_embeddings:
+        logits = quantize.tied_logits(params["embed"], x).astype(jnp.float32)
+    else:
+        logits = quantize.qdot(x, params["head"]).astype(jnp.float32)
     if cfg.padded_vocab != cfg.vocab:
         neg = jnp.full((cfg.padded_vocab - cfg.vocab,), -1e30, jnp.float32)
         logits = logits.at[..., cfg.vocab:].set(neg)
@@ -716,7 +734,7 @@ def apply(params, cfg: ModelConfig, tokens, positions=None, cache=None,
     if page_view is not None:
         assert slot_idx is not None, "page_view requires the slot path"
     dtype = jnp.dtype(cfg.dtype)
-    x = params["embed"][tokens].astype(dtype)
+    x = quantize.embed_lookup(params["embed"], tokens, dtype)
     if cfg.pos_embed == "learned":
         x = x + params["pos"][positions].astype(dtype)
 
@@ -794,7 +812,8 @@ def _mtp_loss(params, cfg: ModelConfig, tokens, hidden):
     B, T = tokens.shape
     h = apply_norm(mtp["norm_h"], hidden[:, : T - 1], cfg)
     e = apply_norm(mtp["norm_e"],
-                   params["embed"][tokens[:, 1:]].astype(dtype), cfg)
+                   quantize.embed_lookup(params["embed"], tokens[:, 1:],
+                                         dtype), cfg)
     x = jnp.concatenate([h, e], axis=-1) @ mtp["proj"].astype(dtype)
     spec = LayerSpec(mixer="mla" if cfg.attention == "mla" else "attn",
                      cross=False, ffn="dense")

@@ -1,0 +1,170 @@
+"""Weight-only int8 drafter quantization (calibrate-then-swap).
+
+Per-output-channel symmetric quantization of the drafter's dense and
+embedding weights: each quantized leaf is replaced by a small dict
+``{"w8": int8, "scale": f32}`` where ``scale`` keeps the reduced axis
+as a broadcast-ready size-1 dim (``absmax / 127`` over the input axis
+for dense kernels, over ``d_model`` for the embedding table). Mixers
+dispatch through :func:`qdot` so the *same* jitted step functions run
+either representation — a quantized pytree is simply a different leaf
+structure, which re-keys the jit cache automatically.
+
+Losslessness is by construction (DESIGN.md §2.9): only drafter
+*proposals* change; the target's greedy accept/correct walk is
+untouched, so committed streams stay greedy-exact while acceptance
+rate (and therefore speed) may move.
+
+Calibration is data-free: symmetric absmax per channel from the
+trained checkpoint (the TensorRT-Model-Optimizer calibrate-then-swap
+pattern), applied at load via ``load_checkpoint(..., quantize="int8")``
+or at engine construction from ``CoSineConfig.drafter_quant`` /
+``ModelConfig.quant``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# dense 2-D kernels eligible for weight-only int8: attention/cross
+# projections, MLP, and the SSM in/out projections. Everything else
+# (norm scales, biases, conv kernels, A_log/dt/D vectors) stays f32 —
+# they are O(d) and contribute nothing to the decode weight stream.
+_DENSE_KEYS = frozenset({
+    "wq", "wk", "wv", "wo", "wi", "wg", "wu", "wd", "in_proj", "out_proj",
+})
+# MLA's latent projections are consumed through reshaped einsums (no
+# single ``x @ w`` site to dispatch), and MoE expert banks go through
+# ``lax.ragged_dot`` which takes plain arrays only.
+_MLA_KEYS = frozenset({"wdq", "wuq", "wdkv", "wkr", "wuk", "wuv"})
+
+
+def is_quantized(leaf) -> bool:
+    """True iff `leaf` is a quantized-weight dict (``{"w8", "scale"}``)."""
+    return isinstance(leaf, dict) and "w8" in leaf and "scale" in leaf
+
+
+def quantize_weight(w, axis: int = -2):
+    """Symmetric per-channel int8 quantization of one weight array.
+
+    `axis` is the reduced (input) axis: ``-2`` for dense ``(..., K, N)``
+    kernels (scale per output channel, shape ``(..., 1, N)``), ``-1``
+    for the embedding table ``(V, D)`` (scale per vocab row, shape
+    ``(V, 1)`` — the same scales serve the row lookup and the tied
+    logits head). Leading stacked-stage axes (the vmap'd ``reps`` dim)
+    are carried through, so ``lax.scan`` slices ``w8`` and ``scale``
+    per layer together.
+    """
+    w = jnp.asarray(w)
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis,
+                     keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    w8 = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return {"w8": w8.astype(jnp.int8), "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_weight(q, dtype=jnp.float32):
+    """Inverse of :func:`quantize_weight` (up to rounding)."""
+    if not is_quantized(q):
+        return jnp.asarray(q, dtype)
+    return (q["w8"].astype(jnp.float32) * q["scale"]).astype(dtype)
+
+
+def qdot(x, w):
+    """``x @ w`` that accepts either a plain array or a quantized dict.
+
+    The quantized form streams int8 weights and applies the per-output
+    -channel scale after the reduction — ``(x @ w8) * scale`` — the
+    in-register dequant contract the Pallas kernel
+    (`kernels/int8_gemv`) implements for the decode hot path. int8 ->
+    bf16/f32 casts are exact (|w8| <= 127), so the only quantization
+    error is the rounding already baked into ``w8``.
+    """
+    if not is_quantized(w):
+        return x @ w
+    return (x @ w["w8"].astype(x.dtype)) * w["scale"].astype(x.dtype)
+
+
+def embed_lookup(emb, tokens, dtype):
+    """Embedding row gather for plain or quantized tables."""
+    if not is_quantized(emb):
+        return emb[tokens].astype(dtype)
+    return (emb["w8"][tokens].astype(dtype)
+            * emb["scale"][tokens].astype(dtype))
+
+
+def tied_logits(emb, x):
+    """``x @ embed.T`` for plain or quantized embedding tables.
+
+    Per-vocab-row scales are per-*output*-channel of the tied head, so
+    they apply after the reduction exactly like :func:`qdot`.
+    """
+    if not is_quantized(emb):
+        return x @ emb.T.astype(x.dtype)
+    return (x @ emb["w8"].T.astype(x.dtype)) * emb["scale"].T.astype(x.dtype)
+
+
+def _quantize_sublayer(p: dict) -> dict:
+    out = {}
+    for k, v in p.items():
+        if k in ("mixer", "cross", "ffn") and isinstance(v, dict):
+            if any(m in v for m in _MLA_KEYS):
+                raise ValueError(
+                    "int8 drafter quantization does not support MLA "
+                    "mixers (latent projections are einsum-consumed); "
+                    "use a dense-attention or SSM drafter")
+            if "router" in v:  # MoE ffn: ragged_dot needs plain arrays
+                out[k] = v
+                continue
+            out[k] = {kk: (quantize_weight(vv)
+                           if kk in _DENSE_KEYS and not is_quantized(vv)
+                           else vv)
+                      for kk, vv in v.items()}
+        else:
+            out[k] = v
+    return out
+
+
+def quantize_params(params: dict, cfg=None) -> dict:
+    """Calibrate-and-swap: quantize a trained checkpoint's dense weights.
+
+    Returns a new params pytree where every eligible dense kernel and
+    the embedding table (plus the untied head, if present) are replaced
+    by ``{"w8", "scale"}`` dicts; norms, biases, conv kernels and the
+    training-only ``mtp``/``encoder`` subtrees pass through untouched.
+    Idempotent: already-quantized leaves are left alone. `cfg` is
+    accepted for symmetry with other model entry points (the walk is
+    purely structural).
+    """
+    del cfg
+    out = {}
+    for k, v in params.items():
+        if k == "embed":
+            out[k] = v if is_quantized(v) else quantize_weight(v, axis=-1)
+        elif k == "head":
+            out[k] = v if is_quantized(v) else quantize_weight(v, axis=-2)
+        elif k == "stages":
+            out[k] = [tuple(_quantize_sublayer(sub_p) for sub_p in stage)
+                      for stage in v]
+        else:  # final_norm, pos, encoder, mtp, ...
+            out[k] = v
+    return out
+
+
+def resolve_drafter_quant(drafters, pool_default: str = "none"):
+    """Apply per-node quantization to engine drafter specs.
+
+    `drafters` is the engine's ``(ModelConfig, params, domain)`` list.
+    Each node's effective mode is ``cfg.quant`` when set, else the
+    pool-wide ``CoSineConfig.drafter_quant`` default — so one pool can
+    run an int8 node beside bf16 nodes. Returns new specs with the
+    resolved mode stamped into each cfg (jits key on it statically) and
+    params quantized where requested.
+    """
+    out = []
+    for cfg, params, domain in drafters:
+        eff = cfg.quant or pool_default
+        if eff == "int8":
+            cfg = cfg if cfg.quant == "int8" else \
+                cfg.with_overrides(quant="int8")
+            params = quantize_params(params, cfg)
+        out.append((cfg, params, domain))
+    return out

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig, SSMConfig
 from repro.models.attention import take_rows
 from repro.models.layers import dense_init
+from repro.models.quantize import qdot
 
 
 # ---------------------------------------------------------------- params
@@ -213,7 +214,7 @@ def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False,
     if token_mask is not None:
         assert st is not None, "token_mask requires a carried state"
 
-    z, xbc, dt = _split_in_proj(x @ p["in_proj"], cfg)
+    z, xbc, dt = _split_in_proj(qdot(x, p["in_proj"]), cfg)
     if st is not None:
         # prepend conv history
         hist = st["conv"].astype(xbc.dtype)
@@ -251,7 +252,7 @@ def ssm_mixer(p, cfg: ModelConfig, x, state=None, use_kernel: bool = False,
     y = y + p["D_skip"][:, None] * xs
     y = y.reshape(B_, L, din)
     y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps)
-    out = y @ p["out_proj"]
+    out = qdot(y, p["out_proj"])
 
     new_state = None
     if state is not None and write:

@@ -51,8 +51,9 @@ from repro.config import CoSineConfig, ModelConfig
 from repro.core import tree as tree_mod
 from repro.core.admission import AdmissionController
 from repro.core.latency_model import (DrafterProfile, LatencyModel,
-                                      homogeneous_profiles)
+                                      pool_profiles)
 from repro.core.request_pool import Request, RequestPool
+from repro.models.quantize import resolve_drafter_quant
 from repro.core.routing import AdaptiveRouter
 from repro.core.scheduler import (PipelineObservation, RequestScheduler,
                                   adaptive_speculation)
@@ -294,6 +295,15 @@ class SpeculativeEngine:
         self.eos = eos_token
         self.seed = seed
         self.target_cfg = target[0]
+        # weight-only drafter quantization (DESIGN.md §2.9): resolve each
+        # node's mode (ModelConfig.quant overrides the pool-wide
+        # cosine.drafter_quant default) and calibrate-and-swap int8
+        # params BEFORE the backend builds its runners, so the jitted
+        # step functions key on the quantized pytree structure. Only
+        # drafts change: the target's accept/correct walk keeps
+        # committed streams greedy-exact.
+        drafters = resolve_drafter_quant(list(drafters),
+                                         cosine.drafter_quant)
         # engine/backend split (DESIGN.md §2.7): the backend owns the
         # runners, the caches and the serving clock; `backend` is "sim"
         # (default — the discrete-event seed behaviour), "async" (the
@@ -333,9 +343,13 @@ class SpeculativeEngine:
         self.avail_ms: Dict[int, float] = {}
         self.rng = np.random.default_rng(seed)
         # heterogeneous cluster personalities (per-drafter stage clocks,
-        # DESIGN.md §2.4); default is the seed's homogeneous behaviour
+        # DESIGN.md §2.4); default is the seed's homogeneous behaviour,
+        # except that int8 weight-only nodes default to the faster
+        # INT8_DRAFT_SPEED pace (calibrated_profiles() then recovers the
+        # realized pace from measured per-cohort step times)
         self.drafter_profiles = (tuple(drafter_profiles) if drafter_profiles
-                                 else homogeneous_profiles(len(self.drafters)))
+                                 else pool_profiles(
+                                     [c for c, _, _ in drafters]))
         assert len(self.drafter_profiles) == len(self.drafters)
         # SSM/hybrid verifiers cannot apply tree masks -> chain-only trees
         self.tree_capable = self.target_cfg.family not in ("ssm", "hybrid")

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.config import ModelConfig
 from repro.models import model as M
+from repro.models import quantize
 
 # ---------------------------------------------------------------------
 # Shape-bucket constants — the single source of truth (tests import
@@ -446,7 +447,11 @@ class ModelRunner:
                 page_size=page_size, pool_pages=pool_pages)
         else:
             self.slots = SlotCacheManager(cfg, max_len, n_slots, cache_dtype)
-        self.embed_np = np.asarray(params["embed"][: cfg.vocab], np.float32)
+        # routing prior embeddings: dequantized view for weight-only
+        # int8 params (the router works in f32 host space either way)
+        self.embed_np = np.asarray(
+            quantize.dequantize_weight(params["embed"])[: cfg.vocab],
+            np.float32)
         # masked slot_extend writes issued by the prefill paths (the
         # burst-admission test asserts batched prefill issues fewer)
         self.n_prefill_writes = 0

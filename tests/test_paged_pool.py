@@ -89,6 +89,48 @@ def test_paged_matches_resident_exotic(kind):
         _eq(la, lb)
 
 
+def test_paged_int8_kv_matches_resident_int8():
+    """kv_dtype='int8' on the paged pool: the page-pool stores int8 KV
+    with per-(token, head) scales (k_scale/v_scale leaves page, gather
+    and scatter exactly like k/v), so paged+int8 is bitwise-identical
+    to resident+int8 across prefill, decode, verify and commit."""
+    res, pag, cfg = _pair(_tiny("attn").with_overrides(kv_dtype="int8"),
+                          page_size=16)
+    pool = pag.slots.cache["stages"][0][0]["self"]
+    assert pool["k"].dtype == jnp.int8 and "k_scale" in pool
+    rng = np.random.default_rng(7)
+    rids = [0, 1]
+    for rid in rids:
+        toks = rng.integers(0, cfg.vocab, 9 + 4 * rid)
+        la, _ = res.prefill_request(rid, toks)
+        lb, _ = pag.prefill_request(rid, toks)
+        _eq(la, lb)
+    for t in rng.integers(0, cfg.vocab, (3, 2)):
+        la, _ = res.decode(rids, t)
+        lb, _ = pag.decode(rids, t)
+        _eq(la, lb)
+    G = 4
+    vt = rng.integers(0, cfg.vocab, (2, G))
+    rel = np.broadcast_to(np.arange(G, dtype=np.int32), (2, G))
+    mask = np.broadcast_to(np.tril(np.ones((G, G), bool)), (2, G, G))
+    _eq(res.verify(rids, vt, rel, mask), pag.verify(rids, vt, rel, mask))
+    commits = {0: [1, 2, 3], 1: [4]}
+    ta, tb = res.extend_committed(commits), pag.extend_committed(commits)
+    for rid in commits:
+        _eq(ta[rid], tb[rid])
+
+
+def test_mla_int8_kv_rejected_at_construction():
+    """The MLA latent cache has no quantized layout: kv_dtype='int8'
+    with attention='mla' must fail loudly at cache construction (both
+    resident and paged), not silently keep a bf16 pool."""
+    cfg = _tiny_exotic("mla").with_overrides(kv_dtype="int8")
+    with pytest.raises(ValueError, match="mla"):
+        M.init_cache(cfg, 1, MAX_LEN)
+    with pytest.raises(ValueError, match="mla"):
+        M.init_paged_cache(cfg, 1, page_size=16)
+
+
 def test_paged_swa_prompt_past_ring_capacity():
     """A prompt longer than the ring (300 tokens, window 16) wraps the
     paged ring exactly like the resident one."""

@@ -1,0 +1,339 @@
+"""Weight-only int8 drafter path (DESIGN.md §2.9): per-output-channel
+symmetric quantization of drafter weights, the qdot dispatch that lets
+the same step functions run quantized params, the fused int8 GEMV decode
+kernel against its oracle, the checkpoint calibrate-then-swap hook, and
+— the serving claim — mixed-precision heterogeneous pools whose
+committed streams stay greedy-exact: quantization may only change which
+drafts are proposed, never what the target commits."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import TINY_MAX_LEN as MAX_LEN, tiny_model_cfg as _tiny
+from repro.config import CoSineConfig, MLAConfig, ModelConfig, MoEConfig
+from repro.core.latency_model import (DrafterProfile, INT8_DRAFT_SPEED,
+                                      pool_profiles)
+from repro.kernels.int8_gemv.ops import int8_gemv, int8_gemv_xla
+from repro.kernels.int8_gemv.ref import int8_gemv_ref
+from repro.models import model as M
+from repro.models.quantize import (dequantize_weight, embed_lookup,
+                                   is_quantized, qdot, quantize_params,
+                                   quantize_weight, resolve_drafter_quant,
+                                   tied_logits)
+from repro.serving.engine import SpeculativeEngine
+
+
+# ------------------------------------------------------------ quantize units
+def test_quantize_roundtrip_error_bound():
+    """Per-output-channel symmetric int8: the dequantized weight is
+    within half a quantization step (absmax/254) of the original, per
+    column."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 48)) * 0.3
+    q = quantize_weight(w)
+    assert q["w8"].dtype == jnp.int8 and q["w8"].shape == w.shape
+    assert q["scale"].shape == (1, 48)
+    err = jnp.abs(dequantize_weight(q) - w)
+    bound = jnp.max(jnp.abs(w), axis=0, keepdims=True) / 254.0
+    assert bool(jnp.all(err <= bound + 1e-7))
+
+
+def test_quantize_weight_zero_column():
+    """An all-zero output channel must not divide by zero and must
+    round-trip to exactly zero."""
+    w = jnp.zeros((8, 3)).at[:, 0].set(1.0)
+    q = quantize_weight(w)
+    np.testing.assert_array_equal(np.asarray(dequantize_weight(q)[:, 1:]),
+                                  0.0)
+
+
+def test_qdot_plain_is_bitwise_plain_matmul():
+    """Unquantized params take the identical `x @ w` path — bitwise, so
+    every pre-existing byte-identity test still holds through qdot."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 32))
+    w = jax.random.normal(jax.random.PRNGKey(2), (32, 24))
+    np.testing.assert_array_equal(np.asarray(qdot(x, w)), np.asarray(x @ w))
+
+
+def test_qdot_quant_matches_dequantized_matmul():
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 32))
+    w = jax.random.normal(jax.random.PRNGKey(4), (32, 24))
+    q = quantize_weight(w)
+    np.testing.assert_allclose(np.asarray(qdot(x, q)),
+                               np.asarray(x @ dequantize_weight(q)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_embed_lookup_and_tied_logits_quantized():
+    emb = jax.random.normal(jax.random.PRNGKey(5), (50, 32)) * 0.02
+    toks = jnp.asarray([[1, 4, 49], [0, 2, 7]])
+    q = quantize_weight(emb, axis=-1)          # per-row (per-token) scales
+    assert q["scale"].shape == (50, 1)
+    deq = dequantize_weight(q)
+    np.testing.assert_allclose(
+        np.asarray(embed_lookup(q, toks, jnp.float32)),
+        np.asarray(deq[toks]), rtol=1e-6, atol=1e-6)
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 3, 32))
+    np.testing.assert_allclose(np.asarray(tied_logits(q, x)),
+                               np.asarray(x @ deq.T), rtol=1e-4, atol=1e-4)
+
+
+def test_quantize_params_idempotent_and_typed():
+    cfg = _tiny("attn")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    qp = quantize_params(params, cfg)
+    assert is_quantized(qp["embed"])
+    mixer = qp["stages"][0][0]["mixer"]
+    assert all(is_quantized(mixer[k]) for k in ("wq", "wk", "wv", "wo"))
+    # norms stay plain f32
+    assert not is_quantized(qp["stages"][0][0]["ln1"])
+    qp2 = quantize_params(qp, cfg)
+    np.testing.assert_array_equal(np.asarray(qp2["embed"]["w8"]),
+                                  np.asarray(qp["embed"]["w8"]))
+
+
+def test_quantize_params_rejects_mla():
+    from test_runner_slots import _tiny_exotic
+    cfg = _tiny_exotic("mla")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="MLA"):
+        quantize_params(params, cfg)
+
+
+def test_quantize_params_skips_moe_ffn():
+    """MoE expert weights feed lax.ragged_dot (plain arrays only): the
+    router/expert leaves pass through unquantized, attention still
+    quantizes."""
+    cfg = ModelConfig(name="tiny-moe", family="moe", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab=50, tie_embeddings=True, dtype="float32",
+                      moe=MoEConfig(n_routed=4, top_k=2, d_ff=64))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    qp = quantize_params(params, cfg)
+    sub = qp["stages"][0][0]
+    assert is_quantized(sub["mixer"]["wq"])
+    moe_ffn = sub["ffn"]
+    assert "router" in moe_ffn
+    assert not any(is_quantized(v) for v in moe_ffn.values())
+
+
+# ------------------------------------------------------------- int8 GEMV
+def test_int8_gemv_kernel_bitwise_vs_oracle_aligned():
+    """Tile-aligned shape: the Pallas kernel (interpret mode) tiles N
+    only, one full-K dot per tile — the same reduction order as the
+    oracle's single dot, so equality is bitwise, not allclose."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, 256), jnp.float32)
+    w8 = jax.random.randint(jax.random.PRNGKey(8), (256, 384), -127, 128,
+                            jnp.int8)
+    scale = jax.random.uniform(jax.random.PRNGKey(9), (1, 384),
+                               minval=0.001, maxval=0.02)
+    got = int8_gemv(x, w8, scale, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(int8_gemv_ref(x, w8, scale)))
+
+
+def test_int8_gemv_kernel_unaligned_allclose():
+    """Unaligned (B, K, N): the wrapper zero-pads to tile multiples; the
+    padded-K tail may reorder the SIMD reduction, so the contract
+    degrades to allclose."""
+    x = jax.random.normal(jax.random.PRNGKey(10), (3, 100), jnp.float32)
+    w8 = jax.random.randint(jax.random.PRNGKey(11), (100, 70), -127, 128,
+                            jnp.int8)
+    scale = jnp.full((1, 70), 0.01, jnp.float32)
+    want = int8_gemv_ref(x, w8, scale)
+    got = int8_gemv(x, w8, scale, interpret=True)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(int8_gemv_xla(x, w8, scale)),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------- checkpoint
+def test_checkpoint_quantize_on_load(tmp_path):
+    from repro.checkpoint.store import load_checkpoint, save_checkpoint
+    cfg = _tiny("attn")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    path = str(tmp_path / "ck.msgpack")
+    save_checkpoint(path, params, {"loss": 1.0})
+    qp, meta = load_checkpoint(path, quantize="int8")
+    want = quantize_params(params, cfg)
+    np.testing.assert_array_equal(np.asarray(qp["embed"]["w8"]),
+                                  np.asarray(want["embed"]["w8"]))
+    # an already-quantized checkpoint round-trips and passes through
+    qpath = str(tmp_path / "ck8.msgpack")
+    save_checkpoint(qpath, qp, meta)
+    qp2, _ = load_checkpoint(qpath, quantize="int8")
+    np.testing.assert_array_equal(np.asarray(qp2["embed"]["w8"]),
+                                  np.asarray(qp["embed"]["w8"]))
+    with pytest.raises(ValueError, match="quantize"):
+        load_checkpoint(path, quantize="fp4")
+
+
+# ----------------------------------------------------- forward, all families
+@pytest.mark.parametrize("kind", ["attn", "ssm", "hybrid"])
+def test_quantized_forward_runs_and_tracks_plain(kind):
+    """The same prefill/decode step functions run quantized params for
+    every mixer family; argmax tokens track the unquantized model on a
+    random init (weights are small, so quantization noise rarely flips
+    the argmax)."""
+    cfg = _tiny(kind)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    qp = quantize_params(params, cfg)
+    toks = jnp.asarray([[1, 5, 9, 2, 7, 3]])
+    c1 = M.init_cache(cfg, 1, MAX_LEN, dtype=jnp.float32)
+    c2 = M.init_cache(cfg, 1, MAX_LEN, dtype=jnp.float32)
+    lg, c1, _ = M.prefill(params, cfg, toks, c1)
+    qlg, c2, _ = M.prefill(qp, cfg, toks, c2)
+    assert qlg.shape == lg.shape
+    agree = float(jnp.mean((jnp.argmax(lg[..., :cfg.vocab], -1)
+                            == jnp.argmax(qlg[..., :cfg.vocab], -1))
+                           .astype(jnp.float32)))
+    assert agree >= 0.5
+    step = jnp.asarray([[4]])
+    qlg2, _, _ = M.decode_step(qp, cfg, step, c2)
+    assert qlg2.shape[:2] == (1, 1)
+
+
+# ------------------------------------------------- pool config / profiles
+def test_resolve_drafter_quant_per_node_overrides():
+    cfg = _tiny("attn")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    drafters = [(cfg, params, "a"),                              # inherit
+                (cfg.with_overrides(quant="none"), params, "b"),  # pinned
+                (cfg.with_overrides(quant="int8"), params, "c")]
+    out = resolve_drafter_quant(drafters, pool_default="int8")
+    assert [c.quant for c, _, _ in out] == ["int8", "none", "int8"]
+    assert is_quantized(out[0][1]["embed"])
+    assert not is_quantized(out[1][1]["embed"])
+    assert is_quantized(out[2][1]["embed"])
+    speeds = [p.speed for p in pool_profiles([c for c, _, _ in out])]
+    assert speeds == [INT8_DRAFT_SPEED, 1.0, INT8_DRAFT_SPEED]
+
+
+# ------------------------------------------------- engine losslessness
+def _greedy_reference(cfg, params, prompt, n):
+    cache = M.init_cache(cfg, 1, MAX_LEN, dtype=jnp.float32)
+    lg, cache, _ = M.prefill(params, cfg, jnp.asarray(prompt)[None, :], cache)
+    last = np.asarray(lg[0, -1, :cfg.vocab])
+    out = []
+    for _ in range(n):
+        t = int(np.argmax(last))
+        out.append(t)
+        lg, cache, _ = M.decode_step(params, cfg, jnp.asarray([[t]]), cache)
+        last = np.asarray(lg[0, 0, :cfg.vocab])
+    return out
+
+
+def _mixed_drafters(vocab=50):
+    dcfg = ModelConfig(name="tiny-draft", family="dense", n_layers=1,
+                       d_model=48, n_heads=2, n_kv_heads=2, head_dim=16,
+                       d_ff=96, vocab=vocab, tie_embeddings=True,
+                       dtype="float32")
+    return [(dcfg.with_overrides(quant="int8"),
+             M.init_params(jax.random.PRNGKey(1), dcfg), "d0"),
+            (dcfg, M.init_params(jax.random.PRNGKey(2), dcfg), "d1"),
+            (dcfg, M.init_params(jax.random.PRNGKey(3), dcfg), "d2")]
+
+
+def _run_lossless(target, drafters, profiles=None, **cos_kw):
+    tcfg, tparams = target
+    cos = CoSineConfig(n_drafters=len(drafters), draft_len=4,
+                       drafters_per_request=2, tree_width=2, **cos_kw)
+    eng = SpeculativeEngine(target, drafters, cos, strategy="cosine",
+                            max_len=MAX_LEN, seed=0,
+                            drafter_profiles=profiles)
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        eng.submit(rng.integers(1, tcfg.vocab, 8).tolist(),
+                   max_new_tokens=10, arrival_ms=float(i * 5))
+    reqs = eng.pool.pending(float("inf"))
+    eng.run()
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert r.generated == _greedy_reference(tcfg, tparams,
+                                                list(r.prompt),
+                                                len(r.generated))
+    return eng
+
+
+@pytest.mark.parametrize("family", ["attn", "ssm"])
+def test_mixed_pool_greedy_exact(family):
+    """One int8 drafter beside two bf16 drafters, quorum fusion on:
+    committed streams equal the target's greedy reference exactly —
+    attention and SSM targets. The engine's default profiles must price
+    the int8 node at INT8_DRAFT_SPEED."""
+    tcfg = _tiny(family)
+    tparams = M.init_params(jax.random.PRNGKey(0), tcfg)
+    eng = _run_lossless((tcfg, tparams), _mixed_drafters())
+    assert [p.speed for p in eng.drafter_profiles] == [INT8_DRAFT_SPEED,
+                                                       1.0, 1.0]
+    assert eng.stats.draft_calls > 0
+
+
+@pytest.mark.parametrize("policy", ["side", "drop"])
+def test_mixed_pool_lossless_under_straggler_cut(policy):
+    """The int8 node drafts on while an 8x always-straggling bf16 node
+    is cut from every cohort (side-branched or dropped): committed
+    tokens still match greedy exactly, redrafts and all."""
+    tcfg = _tiny("attn")
+    tparams = M.init_params(jax.random.PRNGKey(0), tcfg)
+    profiles = (DrafterProfile(speed=INT8_DRAFT_SPEED),
+                DrafterProfile(speed=8.0, straggle_prob=1.0,
+                               straggle_factor=5.0),
+                DrafterProfile(speed=1.0))
+    _run_lossless((tcfg, tparams), _mixed_drafters(), profiles=profiles,
+                  straggler_policy=policy)
+
+
+def test_cluster_calibration_recovers_int8_pace():
+    """calibrated_profiles() refits node speed from measured (b, l,
+    step_ms) observations: after a mixed-pool run the int8 node's
+    fitted speed is INT8_DRAFT_SPEED, the bf16 nodes' 1.0."""
+    tcfg = _tiny("attn")
+    tparams = M.init_params(jax.random.PRNGKey(0), tcfg)
+    eng = _run_lossless((tcfg, tparams), _mixed_drafters())
+    cal = eng.executor.cluster.calibrated_profiles(min_jobs=2)
+    assert cal[0].speed == pytest.approx(INT8_DRAFT_SPEED, rel=0.05)
+    for p in cal[1:]:
+        if p.jitter_frac == 0.0 and p.speed != 1.0:
+            continue        # node kept its configured profile (few jobs)
+        assert p.speed == pytest.approx(1.0, rel=0.05)
+
+
+@pytest.mark.slow
+def test_trained_mixed_pool_lossless(trained_tiny):
+    """The trained fixture: quantizing a trained drafter genuinely moves
+    its proposal distribution (acceptance may change), yet committed
+    streams stay greedy-exact under quorum fusion — the losslessness-by-
+    construction claim at realistic acceptance rates."""
+    tcfg, tparams = trained_tiny["target"]
+    d = trained_tiny["drafters"]
+    mixed = [(d[0][0].with_overrides(quant="int8"), d[0][1], d[0][2])] \
+        + list(d[1:])
+    cos = CoSineConfig(n_drafters=len(mixed), draft_len=5,
+                       drafters_per_request=2, tree_width=2)
+    eng = SpeculativeEngine((tcfg, tparams), mixed, cos, strategy="cosine",
+                            max_len=256, seed=0)
+    prompts = trained_tiny["corpus"].prompts(4, 12, seed=5)
+    for i, (p, dom) in enumerate(prompts):
+        eng.submit(p, max_new_tokens=12, domain=dom, arrival_ms=float(i * 3))
+    reqs = eng.pool.pending(float("inf"))
+    eng.run()
+    assert all(r.done for r in reqs)
+    from benchmarks.common import greedy_reference
+    for r in reqs:
+        assert r.generated == greedy_reference(tcfg, tparams,
+                                               list(r.prompt),
+                                               len(r.generated),
+                                               max_len=256)
+    # the int8 drafter's proposals really differ from its bf16 self:
+    # same engine seed, bf16 pool — acceptance accounting must diverge
+    eng2 = SpeculativeEngine((tcfg, tparams), list(d), cos,
+                             strategy="cosine", max_len=256, seed=0)
+    for i, (p, dom) in enumerate(prompts):
+        eng2.submit(p, max_new_tokens=12, domain=dom, arrival_ms=float(i * 3))
+    eng2.run()
+    assert (eng.stats.draft_calls, eng.stats.total_committed) \
+        != (eng2.stats.draft_calls, eng2.stats.total_committed) \
+        or eng.stats.mean_acceptance != eng2.stats.mean_acceptance
